@@ -1,0 +1,98 @@
+"""Shared benchmark substrate: a small pretrained LM (cached to disk) +
+perplexity evaluation.  Scaled-down analog of the paper's Llama2/WikiText
+setting — see DESIGN.md §8 for the fidelity statement."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_tree, save_tree
+from repro.data import DataConfig, TokenStream
+from repro.launch.steps import build_state, make_train_step
+from repro.models.parallel import LOCAL
+from repro.models.transformer import ModelConfig, init_params, loss_fn
+from repro.optim import OptConfig, merge_params
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
+
+VOCAB = 512
+SEQ = 128
+
+
+def bench_config(**kw) -> ModelConfig:
+    base = dict(name="bench-lm", family="dense", n_layers=4, d_model=128,
+                vocab=VOCAB, n_heads=8, n_kv_heads=4, head_dim=16, d_ff=256,
+                qk_norm=True, dtype=jnp.float32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def train_stream(seed: int = 1, batch: int = 16) -> TokenStream:
+    return TokenStream(DataConfig(vocab=VOCAB, seq_len=SEQ,
+                                  global_batch=batch, seed=seed))
+
+
+def eval_ppl(params, cfg, n_batches: int = 4, seed: int = 777) -> float:
+    ds = TokenStream(DataConfig(vocab=VOCAB, seq_len=SEQ, global_batch=8,
+                                seed=seed))
+    tot, cnt = 0.0, 0
+    lf = jax.jit(lambda p, b: loss_fn(p, cfg, b, pctx=LOCAL)[1][0])
+    for _ in range(n_batches):
+        tot += float(lf(params, ds.next_batch()))
+        cnt += 1
+    return float(np.exp(tot / cnt))
+
+
+def pretrained_lm(steps: int | None = None, force: bool = False):
+    """Train (or load the cached) benchmark LM. Returns (params, cfg)."""
+    steps = steps or (120 if FAST else 400)
+    cfg = bench_config()
+    cache = os.path.join(RESULTS, "bench_lm")
+    tag = f"{steps}"
+    if not force and os.path.isdir(cache):
+        try:
+            tree, meta = restore_tree(cache)
+            if meta.get("tag") == tag:
+                return jax.tree.map(jnp.asarray, tree), cfg
+        except FileNotFoundError:
+            pass
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ds = train_stream()
+    ocfg = OptConfig(lr=3e-3, trainable="all", total_steps=steps,
+                     schedule="cosine")
+    st = build_state(params, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg, LOCAL))
+    t0 = time.time()
+    for i in range(steps):
+        st, m = step(st, ds.next_batch())
+    params = merge_params(st["train"], st["frozen"])
+    print(f"[bench-lm] pretrained {steps} steps in {time.time()-t0:.0f}s "
+          f"(final loss {float(m['loss']):.3f}, "
+          f"eval ppl {eval_ppl(params, cfg):.2f})")
+    save_tree(params, cache, 0, {"tag": tag})
+    return params, cfg
+
+
+def finetune(params, cfg, steps: int | None = None, lr: float = 1e-3,
+             trainable: str = "lora", seed: int = 5):
+    steps = steps or (40 if FAST else 120)
+    ds = TokenStream(DataConfig(vocab=VOCAB, seq_len=SEQ, global_batch=16,
+                                seed=seed))
+    ocfg = OptConfig(lr=lr, trainable=trainable, total_steps=steps,
+                     schedule="cosine")
+    st = build_state(params, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg, LOCAL))
+    for _ in range(steps):
+        st, m = step(st, ds.next_batch())
+    return merge_params(st["train"], st["frozen"]), float(m["loss"])
+
+
+def calib_batches(n: int = 4, seq: int = SEQ, seed: int = 42):
+    ds = TokenStream(DataConfig(vocab=VOCAB, seq_len=seq, global_batch=4,
+                                seed=seed))
+    return [ds.next_batch() for _ in range(n)]

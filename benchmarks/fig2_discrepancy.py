@@ -1,0 +1,69 @@
+"""Fig. 2 analog: per-layer discrepancy ||X(Q + AB^T - W)|| (Frobenius and
+spectral) for CLoQ vs LoftQ vs zero-init(GPTQ-LoRA), on the pretrained
+benchmark LM at INT2."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESULTS, calib_batches, pretrained_lm
+from repro.core.cloq import discrepancy_norms, regularize_gram
+from repro.core.pipeline import (quantizable_linear_paths, quantize_model,
+                                 run_calibration, to_eager_params)
+from repro.core.quantizer import dequantize_int, unpack_codes
+from repro.models.modules import QSpec
+from repro.utils import get_path
+
+
+def run(bits: int = 2) -> dict:
+    params, cfg = pretrained_lm()
+    calib = calib_batches()
+    qspec = QSpec(bits=bits, group_size=16, rank=16)
+    eparams = to_eager_params(params, cfg)
+    store = run_calibration(eparams, cfg, calib)
+
+    rows = []
+    per_method = {}
+    for method in ("cloq", "loftq", "gptq"):
+        qp, qcfg, _ = quantize_model(params, cfg, calib, method=method,
+                                     qspec=qspec)
+        qe = to_eager_params(qp, qcfg)
+        layer_fro = {}
+        for lin in quantizable_linear_paths(eparams):
+            W = jnp.asarray(get_path(eparams, lin)["w"], jnp.float32)
+            sub = get_path(qe, lin)
+            codes = unpack_codes(sub["qcodes"], bits, W.shape[0])
+            Qd = dequantize_int(codes, sub["scales"], sub["zeros"],
+                                qspec.group_size)
+            H = regularize_gram(jnp.asarray(store.gram(lin)))
+            A = sub["lora_a"].astype(jnp.float32)
+            B = sub["lora_b"].astype(jnp.float32)
+            if method == "gptq":        # zero-init: B=0 -> AB^T = 0
+                B = B * 0
+            fro, spec = discrepancy_norms(H, Qd, A, B, W)
+            layer_fro[lin] = {"fro": fro, "spec": spec}
+        per_method[method] = layer_fro
+
+    for lin in sorted(per_method["cloq"]):
+        rows.append({"layer": lin,
+                     **{f"{m}_fro": per_method[m][lin]["fro"]
+                        for m in per_method},
+                     **{f"{m}_spec": per_method[m][lin]["spec"]
+                        for m in per_method}})
+    total = {m: float(np.sum([per_method[m][l]["fro"]
+                              for l in per_method[m]])) for m in per_method}
+    out = {"bits": bits, "rows": rows, "total_fro": total,
+           "claim_cloq_lt_loftq": total["cloq"] < total["loftq"],
+           "claim_loftq_lt_zeroinit": total["loftq"] < total["gptq"]}
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "fig2_discrepancy.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print(json.dumps({k: v for k, v in r.items() if k != "rows"}, indent=1))

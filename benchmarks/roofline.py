@@ -1,0 +1,253 @@
+"""Roofline analysis (deliverable g): three terms per (arch x cell) on the
+single-pod 16x16 mesh, from the dry-run artifacts.
+
+    compute term    = HLO_FLOPs_global / (chips * 197e12)
+    memory term     = HLO_bytes_global / (chips * 819e9)
+    collective term = collective_bytes_per_chip / 50e9   (per-link model)
+
+``cost_analysis()`` is PER-DEVICE and counts scan bodies once (verified in
+EXPERIMENTS.md §Dry-run), so FLOPs/bytes come from DEPTH EXTRAPOLATION:
+unrolled reduced-depth compiles at two depths d1 < d2 give
+per-layer = (f(d2)-f(d1))/(d2-d1), fixed = f(d1) - d1*per-layer, and
+total(L) = fixed + L*per-layer.  Hybrid archs extrapolate per 6-layer
+(segment+shared-site) units plus a per-mamba-layer term.  Collective bytes
+come from the FULL scanned compile with while-loop ``known_trip_count``
+multipliers (launch/dryrun.py parser).
+
+MODEL_FLOPS = 6*N*D (train, dense), 6*N_active*D (train, MoE), 2*N*D
+(inference cells); the ratio MODEL_FLOPS/HLO_FLOPs flags remat/redundancy
+waste.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline [--probe] [--markdown]
+--probe runs the missing depth-probe compiles (cached under results/probes).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e)
+HBM_BW = 819e9             # B/s / chip
+LINK_BW = 50e9             # B/s / link (ICI)
+
+HERE = os.path.dirname(__file__)
+DRYRUN = os.path.join(HERE, "..", "results", "dryrun")
+PROBES = os.path.join(HERE, "..", "results", "probes")
+OUT = os.path.join(HERE, "..", "results", "roofline.json")
+
+CELLS = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = ["qwen3-moe-30b-a3b", "olmoe-1b-7b", "qwen3-4b", "codeqwen1.5-7b",
+         "qwen3-1.7b", "minicpm-2b", "zamba2-7b", "seamless-m4t-medium",
+         "mamba2-370m", "pixtral-12b"]
+
+# depth-probe pairs per family (hybrid gets segment + mamba probes)
+_PROBE_DEPTHS = {"default": (1, 2), "hybrid": (6, 12, 7, 8)}
+
+
+def _probe_path(arch: str, cell: str, d: int) -> str:
+    return os.path.join(PROBES, f"{arch}.{cell}.d{d}.json")
+
+
+def _load(path: str):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def run_probe(arch: str, cell: str, d: int) -> dict:
+    from repro.launch.dryrun import lower_cell
+    res = lower_cell(arch, cell, multi_pod=False, bits=4, depth=d,
+                     unroll=True, verbose=False)
+    os.makedirs(PROBES, exist_ok=True)
+    with open(_probe_path(arch, cell, d), "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+def _family(arch: str) -> str:
+    return {"zamba2-7b": "hybrid"}.get(arch, "default")
+
+
+def ensure_probes(arch: str, cell: str, do_run: bool) -> dict[int, dict] | None:
+    depths = _PROBE_DEPTHS[_family(arch)]
+    out = {}
+    for d in depths:
+        res = _load(_probe_path(arch, cell, d))
+        if res is None:
+            if not do_run:
+                return None
+            print(f"  probing {arch}.{cell} depth={d} ...", flush=True)
+            res = run_probe(arch, cell, d)
+        if res.get("error") or res.get("skipped"):
+            return None
+        out[d] = res
+    return out
+
+
+def extrapolate(arch: str, probes: dict[int, dict], n_layers: int,
+                key: str) -> float:
+    """Extrapolate a per-device cost metric to the full depth."""
+    def g(d):
+        if key == "coll":
+            return probes[d]["collectives"]["total_bytes"]
+        return probes[d]["cost"][key]
+
+    if _family(arch) == "hybrid":
+        seg = g(12) - g(6)                 # one (6 mamba + shared site) unit
+        mamba = g(8) - g(7)                # one extra mamba layer
+        fixed = g(6) - seg
+        n_sites = n_layers // 6
+        n_rem = n_layers - n_sites * 6
+        return fixed + n_sites * seg + n_rem * mamba
+    d1, d2 = sorted(_PROBE_DEPTHS["default"])
+    per = (g(d2) - g(d1)) / (d2 - d1)
+    return g(d1) - d1 * per + n_layers * per
+
+
+def model_flops(arch: str, cell: str) -> tuple[float, float]:
+    """(MODEL_FLOPS per step, N or N_active)."""
+    import jax
+    from repro.configs import get_config
+    from repro.launch.steps import SHAPE_CELLS
+    from repro.models.transformer import init_params
+    from repro.utils import tree_paths
+
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    n_active, n_enc = 0, 0
+    for path, leaf in tree_paths(shapes).items():
+        size = int(np.prod(leaf.shape))
+        if ".moe." in f".{path}." and "router" not in path:
+            E = cfg.n_experts
+            size = size // E * cfg.top_k
+        if path.startswith(("enc_blocks", "enc_norm")):
+            n_enc += size
+        else:
+            n_active += size
+    c = SHAPE_CELLS[cell]
+    tokens = c["batch"] * (c["seq"] if c["kind"] in ("train", "prefill")
+                           else 1)
+    factor = 6.0 if c["kind"] == "train" else 2.0
+    # encoder params see seq/4 frames (audio stub downsampling)
+    mf = factor * (n_active * tokens + n_enc * tokens / 4)
+    return mf, n_active + n_enc
+
+
+def analyze(do_probe: bool) -> dict:
+    from repro.configs import get_config
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for cell in CELLS:
+            full = _load(os.path.join(DRYRUN, f"{arch}.{cell}.single.json"))
+            if full is None:
+                continue
+            if full.get("skipped"):
+                rows.append({"arch": arch, "cell": cell, "skipped": True,
+                             "reason": full["reason"]})
+                continue
+            if full.get("error"):
+                rows.append({"arch": arch, "cell": cell,
+                             "error": full["error"]})
+                continue
+            probes = ensure_probes(arch, cell, do_probe)
+            chips = full["n_chips"]
+            L = cfg.n_layers
+            if probes:
+                flops_dev = extrapolate(arch, probes, L, "flops")
+                bytes_dev = extrapolate(arch, probes, L, "bytes_accessed")
+                coll_dev = full["collectives"]["total_bytes"]
+            else:   # fall back to the (scan-body-once) full numbers
+                flops_dev = full["cost"]["flops"]
+                bytes_dev = full["cost"]["bytes_accessed"]
+                coll_dev = full["collectives"]["total_bytes"]
+            t_compute = flops_dev / PEAK_FLOPS
+            t_memory = bytes_dev / HBM_BW          # unfused HLO-bytes CEILING
+            # FLOOR: every byte that exists (args + outputs + peak temps)
+            # crosses HBM at least once; true traffic is in [floor, ceiling]
+            floor_bytes = (full["memory"]["argument_bytes"] +
+                           full["memory"]["output_bytes"] +
+                           full["memory"]["temp_bytes"])
+            t_mem_floor = floor_bytes / HBM_BW
+            t_coll = coll_dev / LINK_BW
+            mflops, n_active = model_flops(arch, cell)
+            hlo_global = flops_dev * chips
+            dominant = max(("compute", t_compute), ("memory", t_memory),
+                           ("collective", t_coll), key=lambda kv: kv[1])[0]
+            bound = max(t_compute, t_memory, t_coll)
+            bound_floor = max(t_compute, t_mem_floor, t_coll)
+            rows.append({
+                "arch": arch, "cell": cell, "chips": chips,
+                "flops_per_dev": flops_dev, "bytes_per_dev": bytes_dev,
+                "coll_bytes_per_dev": coll_dev,
+                "t_compute_s": t_compute, "t_memory_s": t_memory,
+                "t_memory_floor_s": t_mem_floor,
+                "t_collective_s": t_coll, "dominant": dominant,
+                "model_flops": mflops, "hlo_flops_global": hlo_global,
+                "useful_ratio": mflops / hlo_global if hlo_global else 0.0,
+                "roofline_fraction": (t_compute / bound) if bound else 0.0,
+                "roofline_fraction_floor":
+                    (t_compute / bound_floor) if bound_floor else 0.0,
+                "probes_used": probes is not None,
+                "temp_bytes_per_dev": full["memory"]["temp_bytes"],
+                "arg_bytes_per_dev": full["memory"]["argument_bytes"],
+            })
+    return {"hardware": {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+                         "link_bw": LINK_BW},
+            "rows": rows}
+
+
+def to_markdown(report: dict) -> str:
+    lines = ["| arch | cell | compute s | mem s (ceil) | mem s (floor) | "
+             "collective s | dominant | useful | frac (ceil) | frac (floor) "
+             "| temp GiB |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in report["rows"]:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['cell']} | — | — | — | — | "
+                         f"skip | — | — | — | — |")
+            continue
+        if r.get("error"):
+            lines.append(f"| {r['arch']} | {r['cell']} | ERROR | | | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_memory_floor_s']:.3e} | "
+            f"{r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | "
+            f"{r['roofline_fraction_floor']:.2f} | "
+            f"{r['temp_bytes_per_dev']/2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--probe", action="store_true",
+                   help="run missing depth-probe compiles")
+    p.add_argument("--markdown", action="store_true")
+    args = p.parse_args(argv)
+    if args.probe:
+        # probes lower on the 16x16 production mesh: needs 512 fake devices
+        # BEFORE jax initializes in this process
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            " --xla_force_host_platform_device_count=512").strip()
+    report = analyze(args.probe)
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(report, f, indent=1)
+    print(to_markdown(report))
+    print(f"\nwrote {OUT}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

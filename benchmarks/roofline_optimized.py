@@ -1,0 +1,87 @@
+"""Roofline rows for the §Perf-optimized variants of the three hillclimb
+cells (depth-extrapolated exactly like the baselines).
+
+    PYTHONPATH=src python -m benchmarks.roofline_optimized
+"""
+from __future__ import annotations
+
+import json
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+from benchmarks.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS, PROBES,
+                                 _PROBE_DEPTHS, _family, extrapolate,
+                                 model_flops)
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results",
+                   "roofline_optimized.json")
+
+VARIANTS = {
+    ("qwen3-4b", "train_4k"): dict(dp_only=True, loss_chunk=512,
+                                   attn_chunk=512),
+    ("zamba2-7b", "train_4k"): dict(dp_only=True, loss_chunk=512,
+                                    attn_chunk=512),
+    ("minicpm-2b", "prefill_32k"): dict(seq_shard=True, prefill_last=True,
+                                        attn_chunk=1024),
+}
+
+FULL_TAG = {
+    ("qwen3-4b", "train_4k"): "lc_ac_dp",
+    ("zamba2-7b", "train_4k"): "b3",
+    ("minicpm-2b", "prefill_32k"): "c3",
+}
+
+
+def main() -> int:
+    from repro.configs import get_config
+    from repro.launch.dryrun import lower_cell
+    rows = []
+    for (arch, cell), kw in VARIANTS.items():
+        cfg = get_config(arch)
+        probes = {}
+        for d in _PROBE_DEPTHS[_family(arch)]:
+            path = os.path.join(PROBES, f"{arch}.{cell}.opt.d{d}.json")
+            if os.path.exists(path):
+                probes[d] = json.load(open(path))
+                continue
+            print(f"probing optimized {arch}.{cell} d={d}", flush=True)
+            res = lower_cell(arch, cell, depth=d, unroll=True, verbose=False,
+                             **kw)
+            os.makedirs(PROBES, exist_ok=True)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            probes[d] = res
+        full = json.load(open(os.path.join(
+            os.path.dirname(__file__), "..", "results", "dryrun",
+            [p for p in os.listdir(os.path.join(os.path.dirname(__file__),
+                                                "..", "results", "dryrun"))
+             if p.startswith(f"{arch}.{cell}.single") and
+             FULL_TAG[(arch, cell)] in p][0])))
+        L = cfg.n_layers
+        flops = extrapolate(arch, probes, L, "flops")
+        bts = extrapolate(arch, probes, L, "bytes_accessed")
+        coll = full["collectives"]["total_bytes"]
+        tc, tm, tl = flops / PEAK_FLOPS, bts / HBM_BW, coll / LINK_BW
+        mf, _ = model_flops(arch, cell)
+        chips = full["n_chips"]
+        rows.append({
+            "arch": arch, "cell": cell, "variant": FULL_TAG[(arch, cell)],
+            "t_compute_s": tc, "t_memory_s": tm, "t_collective_s": tl,
+            "dominant": max([("compute", tc), ("memory", tm),
+                             ("collective", tl)], key=lambda x: x[1])[0],
+            "useful_ratio": mf / (flops * chips),
+            "roofline_fraction": tc / max(tc, tm, tl),
+            "temp_bytes_per_dev": full["memory"]["temp_bytes"],
+        })
+        print(json.dumps(rows[-1], indent=1))
+    with open(OUT, "w") as f:
+        json.dump({"rows": rows}, f, indent=1)
+    print("wrote", OUT)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,0 +1,64 @@
+"""Benchmark driver: one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,table1,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of the
+benchmark; derived = the headline quantity it produces) and writes detailed
+JSONs under results/.  Set BENCH_FAST=1 for reduced step counts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="")
+    args = p.parse_args(argv)
+
+    from benchmarks import (fig2_discrepancy, kernel_bench, table1_finetune,
+                            table7_ab_combos, table8_calib_size,
+                            table9_seqlen, table10_init_cost)
+
+    entries = [
+        ("fig2_discrepancy", fig2_discrepancy.run,
+         lambda r: f"cloq<loftq={r['claim_cloq_lt_loftq']}"),
+        ("table1_finetune", table1_finetune.run,
+         lambda r: f"int2_cloq_best={r['claim_int2_cloq_best']}"),
+        ("table7_ab_combos", table7_ab_combos.run,
+         lambda r: f"paper_split_best={r['claim_paper_split_best_ft']}"),
+        ("table8_calib_size", table8_calib_size.run,
+         lambda r: f"robust={r['claim_robust_to_calib_size']}"),
+        ("table9_seqlen", table9_seqlen.run,
+         lambda r: f"longer_no_worse={r['claim_longer_no_worse']}"),
+        ("table10_init_cost", table10_init_cost.run,
+         lambda r: f"ratio={r['rows'][-1]['ratio']}"),
+        ("kernel_bench", kernel_bench.run,
+         lambda r: f"kernels={len(r['rows'])}"),
+    ]
+    selected = [e for e in entries
+                if not args.only or e[0] in args.only.split(",")]
+
+    print("name,us_per_call,derived")
+    for name, fn, derive in selected:
+        t0 = time.time()
+        result = fn()
+        us = (time.time() - t0) * 1e6
+        print(f"{name},{us:.0f},{derive(result)}", flush=True)
+
+    # roofline table from cached dry-run artifacts (no probes here; run
+    # `python -m benchmarks.roofline --probe` for the full extrapolation)
+    try:
+        from benchmarks import roofline
+        rep = roofline.analyze(do_probe=False)
+        n = sum(1 for r in rep["rows"] if not r.get("skipped")
+                and not r.get("error"))
+        print(f"roofline_cells,0,{n}")
+    except Exception as e:  # dry-run artifacts absent
+        print(f"roofline_cells,0,unavailable({type(e).__name__})")
+
+
+if __name__ == "__main__":
+    main()

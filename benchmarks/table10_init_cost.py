@@ -1,0 +1,59 @@
+"""Table 10 analog: initialization wall-time, LoftQ vs CLoQ (vs distributed
+CLoQ path), at realistic layer dims.  No backprop in either — the paper's
+cost claim is SVD-count, which we measure directly."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESULTS, FAST
+from repro.core.cloq import cloq_init, regularize_gram
+from repro.core.loftq import loftq_init
+from repro.core.magr import magr_preprocess
+from repro.core.optq import optq_quantize
+from repro.core.quantizer import QuantConfig
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    dims = [(512, 512), (1024, 1024)] if FAST else \
+        [(512, 512), (1024, 1024), (2048, 2048)]
+    rows = []
+    for (m, n) in dims:
+        W = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        X = jnp.asarray(rng.normal(size=(2048, m)), jnp.float32)
+        H = X.T @ X
+        qcfg = QuantConfig(bits=2, group_size=64)
+
+        t0 = time.time()
+        Ql, Al, Bl, _ = loftq_init(W, qcfg, 64, iters=5)
+        jax.block_until_ready(Al)
+        t_loftq = time.time() - t0
+
+        t0 = time.time()
+        Wp = magr_preprocess(W, H, alpha=0.001 * float(jnp.trace(H) / m))
+        Qd, _, _, _ = optq_quantize(Wp, H, qcfg)
+        A, B = cloq_init(regularize_gram(H), W - Qd, 64)
+        jax.block_until_ready(A)
+        t_cloq = time.time() - t0
+
+        rows.append({"m": m, "n": n, "loftq_s": round(t_loftq, 3),
+                     "cloq_s": round(t_cloq, 3),
+                     "ratio": round(t_cloq / t_loftq, 2)})
+        print(f"  {m}x{n}: loftq={t_loftq:.2f}s cloq={t_cloq:.2f}s", flush=True)
+    out = {"rows": rows,
+           "note": ("paper Table 10: comparable runtimes; CLoQ trades "
+                    "LoftQ's 5 SVD iterations for OPTQ+2 SVDs")}
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "table10_init_cost.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

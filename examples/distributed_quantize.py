@@ -1,0 +1,46 @@
+"""Distributed OPTQ + CLoQ (DESIGN.md §3): quantize a layer with its output
+channels sharded over the model axis, and compute the calibrated LoRA init
+with the exact Gram-trick SVD — one m x m psum of communication.
+
+Runs on 8 fake CPU devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/distributed_quantize.py
+"""
+import os
+
+if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cloq import (cloq_init, cloq_init_sharded, lowrank_objective,
+                             regularize_gram)
+from repro.core.optq import optq_quantize, optq_quantize_sharded
+from repro.core.quantizer import QuantConfig
+
+rng = np.random.default_rng(0)
+m, n, rank = 128, 512, 32
+W = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+X = jnp.asarray(rng.normal(size=(4096, m)), jnp.float32)
+H = X.T @ X
+
+mesh = jax.make_mesh((8,), ("model",))
+cfg = QuantConfig(bits=2, group_size=64)
+
+print(f"quantizing W {W.shape} INT{cfg.bits} over {len(jax.devices())} devices")
+Qd_sh, _, _, _ = optq_quantize_sharded(W, H, cfg, mesh)      # column-sharded
+Qd_loc, _, _, _ = optq_quantize(W, H, cfg)                   # reference
+print("sharded OPTQ == local:",
+      bool(jnp.allclose(Qd_sh, Qd_loc, atol=2e-4)))
+
+Hreg = regularize_gram(H)
+A_sh, B_sh = cloq_init_sharded(Hreg, W - Qd_sh, rank, mesh)  # Gram-trick SVD
+A_loc, B_loc = cloq_init(Hreg, W - Qd_loc, rank)
+obj_sh = lowrank_objective(Hreg, W - Qd_sh, A_sh, B_sh)
+obj_loc = lowrank_objective(Hreg, W - Qd_loc, A_loc, B_loc)
+print(f"calibrated objective: sharded {obj_sh:.3f} vs local {obj_loc:.3f}")
+print("communication: one m x m psum =", m * m * 4, "bytes/layer")

@@ -1,0 +1,44 @@
+"""End-to-end driver over any assigned architecture (smoke scale):
+
+    PYTHONPATH=src python examples/finetune_arch.py --arch zamba2-7b \
+        --method cloq --bits 2 --steps 80
+
+Demonstrates: config registry, CLoQ pipeline on SSM/hybrid/MoE/enc-dec
+families, checkpointed fault-tolerant fine-tuning (kill and re-run with
+--resume to continue), method comparison with --compare.
+"""
+import argparse
+import sys
+
+from repro.launch import train as train_driver
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="zamba2-7b")
+    p.add_argument("--method", default="cloq")
+    p.add_argument("--bits", type=int, default=2)
+    p.add_argument("--steps", type=int, default=80)
+    p.add_argument("--resume", action="store_true")
+    p.add_argument("--compare", action="store_true",
+                   help="run cloq vs loftq vs rtn back-to-back")
+    args = p.parse_args()
+
+    methods = ["cloq", "loftq", "rtn"] if args.compare else [args.method]
+    for method in methods:
+        print(f"\n=== {args.arch} / {method} / INT{args.bits} ===")
+        argv = ["--arch", args.arch, "--smoke", "--method", method,
+                "--bits", str(args.bits), "--group-size", "16",
+                "--rank", "8", "--steps", str(args.steps),
+                "--pretrain-steps", "60",
+                "--ckpt-dir", f"/tmp/ck_{args.arch}_{method}",
+                "--ckpt-every", "20"]
+        if args.resume:
+            argv.append("--resume")
+        rc = train_driver.main(argv)
+        if rc:
+            sys.exit(rc)
+
+
+if __name__ == "__main__":
+    main()

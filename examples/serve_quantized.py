@@ -1,0 +1,27 @@
+"""Batched serving of a CLoQ-quantized model (continuous-batching lite):
+
+    PYTHONPATH=src python examples/serve_quantized.py --arch mamba2-370m
+
+Quantizes the smoke model to INT4 with CLoQ, then serves a queue of
+requests through the static-batch decode step (the same step the decode_*
+dry-run cells lower at production scale), reporting tokens/s.
+"""
+import argparse
+
+from repro.launch import serve as serve_driver
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="mamba2-370m")
+    p.add_argument("--bits", type=int, default=4)
+    p.add_argument("--requests", type=int, default=8)
+    args = p.parse_args()
+    serve_driver.main(["--arch", args.arch, "--smoke", "--method", "cloq",
+                       "--bits", str(args.bits), "--batch", "4",
+                       "--cache-len", "64", "--requests",
+                       str(args.requests), "--max-new", "16"])
+
+
+if __name__ == "__main__":
+    main()

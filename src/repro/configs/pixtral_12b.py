@@ -1,0 +1,28 @@
+"""pixtral-12b [hf:mistralai/Pixtral-12B-2409]: 40L d_model=5120 32H
+(GQA kv=8, head_dim=128) d_ff=14336 vocab=131072; mistral-nemo decoder
+backbone.  The pixtral-ViT frontend is a STUB: ``input_specs`` provides 256
+precomputed patch embeddings prepended to the token sequence (the stated
+seq_len counts patches + text)."""
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-12b", family="dense",
+        n_layers=40, d_model=5120, vocab=131072, vocab_pad_multiple=256,
+        n_heads=32, n_kv_heads=8, head_dim=128, d_ff=14336,
+        rope_theta=1e6, frontend="vision", n_prefix=256,
+        dtype=jnp.bfloat16,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-12b-smoke", family="dense",
+        n_layers=2, d_model=64, vocab=512,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        frontend="vision", n_prefix=8,
+        dtype=jnp.float32,
+    )

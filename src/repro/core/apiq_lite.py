@@ -1,0 +1,59 @@
+"""ApiQ-lite: gradient-based per-layer (A, B) refinement baseline.
+
+ApiQ (Liao et al., 2024) optimizes the layer/block discrepancy with
+back-propagation.  This lite variant implements the layer-wise flavor
+(`ApiQ-lw`) on our calibrated objective,
+
+    min_{A,B}  || X (Q + A B^T - W) ||_F^2
+             = Tr((Q + AB^T - W)^T H (Q + AB^T - W)),
+
+with Adam on (A, B) given a fixed OPTQ base Q — i.e. the gradient-descent
+counterpart of CLoQ's closed form, used in EXPERIMENTS.md to show the
+closed form matches ~200 Adam steps at zero iteration cost."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("rank", "steps"))
+def apiq_lite_init(H: Array, dW: Array, rank: int, steps: int = 200,
+                   lr: float = 3e-3, seed: int = 0):
+    """Adam on (A, B) minimizing Tr((AB^T-dW)^T H (AB^T-dW)).
+
+    Returns (A (m, r), B (n, r), trajectory of objective values)."""
+    m, n = dW.shape
+    key = jax.random.PRNGKey(seed)
+    scale = jnp.sqrt(jnp.maximum(jnp.trace(H) / m, 1e-6))
+    A = jax.random.normal(key, (m, rank), jnp.float32) / jnp.sqrt(m)
+    B = jnp.zeros((n, rank), jnp.float32)
+
+    def obj(params):
+        A, B = params
+        D = A @ B.T - dW
+        return jnp.einsum("ij,ik,kj->", D, H, D) / (scale ** 2)
+
+    vg = jax.value_and_grad(obj)
+    mu = jax.tree.map(jnp.zeros_like, (A, B))
+    nu = jax.tree.map(jnp.zeros_like, (A, B))
+
+    def step(carry, i):
+        params, mu, nu = carry
+        v, g = vg(params)
+        t = i + 1.0
+        mu = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, mu, g)
+        nu = jax.tree.map(lambda n_, g_: 0.999 * n_ + 0.001 * g_ * g_, nu, g)
+        upd = jax.tree.map(
+            lambda m_, n_: (m_ / (1 - 0.9 ** t)) /
+                           (jnp.sqrt(n_ / (1 - 0.999 ** t)) + 1e-8), mu, nu)
+        params = jax.tree.map(lambda p, u: p - lr * u, params, upd)
+        return (params, mu, nu), v
+
+    (params, _, _), traj = jax.lax.scan(step, ((A, B), mu, nu),
+                                        jnp.arange(steps, dtype=jnp.float32))
+    A, B = params
+    return A, B, traj * (scale ** 2)

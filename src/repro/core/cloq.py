@@ -1,0 +1,130 @@
+"""CLoQ (Theorem 3.1): closed-form calibrated LoRA initialization.
+
+Given the regularized calibration Gram ``H = X^T X + lambda*I`` and the
+quantization residual ``dW = W - Q``, the optimal rank-r adapters minimizing
+
+    || X (A B^T - dW) ||_F^2
+
+are any factorization of ``R^{-1} LR_r(R dW)`` where ``R = S_H^{1/2} U_H^T``
+is the non-symmetric root of ``H`` (H = R^T R) and ``LR_r`` the best rank-r
+approximation (Eckart–Young).  Exactly two eigendecompositions/SVDs:
+``eigh(H)`` (m x m) and ``svd(R dW)`` (m x n) — independent of the
+calibration-set size.
+
+Splits of ``A B^T = R^{-1} U_{:r} S_{:r} V_{:r}^T`` (paper Table 7):
+    "paper" : A = R^{-1} U S,      B = V        (best; default)
+    "bsigma": A = R^{-1} U,        B = V S
+    "sqrt"  : A = R^{-1} U S^1/2,  B = V S^1/2
+
+:func:`cloq_init_sharded` is the TPU-scale variant: ``dW`` column-sharded
+over the model axis, the SVD of ``R dW`` computed exactly via the Gram trick
+(one m x m psum per layer) — see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+SPLITS = ("paper", "bsigma", "sqrt")
+
+
+def regularize_gram(H: Array, lambda_frac: float = 0.01) -> Array:
+    m = H.shape[0]
+    lam = lambda_frac * jnp.trace(H) / m
+    return H + (lam + 1e-8) * jnp.eye(m, dtype=H.dtype)
+
+
+def gram_root(H: Array, eps: float = 1e-10):
+    """Non-symmetric root R = S^{1/2} U^T with H = R^T R, plus its inverse.
+
+    Rank-deficient H: eigenvalues are floored at ``eps * max_eig`` so that
+    ``Rinv`` acts as the pseudo-inverse path of Theorem 3.1's remark."""
+    H = jnp.asarray(H, jnp.float32)
+    evals, evecs = jnp.linalg.eigh(H)
+    floor = eps * jnp.maximum(evals[-1], 1e-30)
+    ev = jnp.maximum(evals, floor)
+    sq = jnp.sqrt(ev)
+    R = sq[:, None] * evecs.T
+    Rinv = evecs * (1.0 / sq)[None, :]
+    return R, Rinv
+
+
+def split_factors(RinvU: Array, S: Array, V: Array, split: str):
+    if split == "paper":
+        return RinvU * S[None, :], V
+    if split == "bsigma":
+        return RinvU, V * S[None, :]
+    if split == "sqrt":
+        rt = jnp.sqrt(S)
+        return RinvU * rt[None, :], V * rt[None, :]
+    raise ValueError(f"unknown split {split!r}; options {SPLITS}")
+
+
+@partial(jax.jit, static_argnames=("rank", "split"))
+def cloq_init(H: Array, dW: Array, rank: int, split: str = "paper"):
+    """Closed-form (A, B) minimizing ||X (A B^T - dW)||_F^2.
+
+    ``H`` must already be regularized (Algorithm 1 input).  Returns
+    (A (m,r), B (n,r))."""
+    dW = jnp.asarray(dW, jnp.float32)
+    R, Rinv = gram_root(H)
+    M = R @ dW
+    U, S, Vt = jnp.linalg.svd(M, full_matrices=False)
+    r = rank
+    A, B = split_factors(Rinv @ U[:, :r], S[:r], Vt[:r, :].T, split)
+    return A, B
+
+
+def lowrank_objective(H: Array, dW: Array, A: Array, B: Array) -> float:
+    """||X (A B^T - dW)||_F given H = X^T X (no X materialization)."""
+    D = A @ B.T - dW
+    v = jnp.einsum("ij,ik,kj->", D, H, D)
+    return float(jnp.sqrt(jnp.maximum(v, 0.0)))
+
+
+def discrepancy_norms(H: Array, Q: Array, A: Array, B: Array, W: Array):
+    """Paper Fig. 2 quantities: ||X(Q + AB^T - W)|| in Frobenius and spectral
+    norm (spectral computed on R D, since ||XD||_2 = ||R D||_2)."""
+    D = Q + A @ B.T - W
+    R, _ = gram_root(H)
+    RD = R @ D
+    fro = float(jnp.linalg.norm(RD))
+    spec = float(jnp.linalg.norm(RD, ord=2))
+    return fro, spec
+
+
+def cloq_init_sharded(H: Array, dW: Array, rank: int, mesh,
+                      axis: str = "model", split: str = "paper"):
+    """Distributed CLoQ: ``dW`` (m, n) column-sharded over ``axis``.
+
+    Exact top-r SVD of R dW via the Gram trick:
+        G = (R dW)(R dW)^T   -- psum over column shards (m x m)
+        eigh(G) -> U, S^2    -- replicated
+        V_local = (R dW)_l^T U S^{-1}  -- shard-local
+    Communication: one m*m f32 all-reduce per layer.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    R, Rinv = gram_root(jnp.asarray(H, jnp.float32))
+    dW = jnp.asarray(dW, jnp.float32)
+
+    def local(R_, Rinv_, dW_l):
+        M_l = R_ @ dW_l                                     # (m, n_local)
+        G = jax.lax.psum(M_l @ M_l.T, axis)                 # (m, m)
+        evals, evecs = jnp.linalg.eigh(G)                   # ascending
+        top = evals[::-1][:rank]
+        U = evecs[:, ::-1][:, :rank]
+        S = jnp.sqrt(jnp.maximum(top, 1e-30))
+        V_l = (M_l.T @ U) / S[None, :]                      # (n_local, r)
+        A, B_l = split_factors(Rinv_ @ U, S, V_l, split)
+        return A, B_l
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(None, None), P(None, None), P(None, axis)),
+                   out_specs=(P(None, None), P(axis, None)))
+    return fn(R, Rinv, dW)

@@ -1,0 +1,63 @@
+"""LoftQ baseline (Li et al., 2023): data-free alternating Q/low-rank init.
+
+    min_{Q, A, B}  || Q + A B^T - W ||_F^2                    (paper eq. 6)
+
+AltMin: Q <- quant(W - A B^T);  (A, B) <- SVD_r(W - Q), split as
+A = U_r S_r^{1/2}, B = V_r S_r^{1/2} (LoftQ's choice). Default 5 iterations.
+Supports the uniform INT grid (to compare heads-up with CLoQ) and NF4.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import (QuantConfig, dequantize_int, dequantize_nf4,
+                                  quantize_int, quantize_nf4)
+
+Array = jax.Array
+
+
+def _rtn_roundtrip(W: Array, cfg: QuantConfig):
+    if cfg.fmt == "nf4":
+        codes, absmax = quantize_nf4(W, cfg.group_size)
+        return dequantize_nf4(codes, absmax, cfg.group_size), (codes, absmax)
+    codes, s, z = quantize_int(W, cfg.bits, cfg.group_size)
+    return dequantize_int(codes, s, z, cfg.group_size), (codes, s, z)
+
+
+def loftq_init(W: Array, cfg: QuantConfig, rank: int, iters: int = 5):
+    """Returns (Q_dequant, A, B, qstate) after ``iters`` AltMin rounds."""
+    W = jnp.asarray(W, jnp.float32)
+    m, n = W.shape
+    A = jnp.zeros((m, rank), jnp.float32)
+    B = jnp.zeros((n, rank), jnp.float32)
+    Qd, qstate = _rtn_roundtrip(W, cfg)
+    for _ in range(iters):
+        Qd, qstate = _rtn_roundtrip(W - A @ B.T, cfg)
+        U, S, Vt = jnp.linalg.svd(W - Qd, full_matrices=False)
+        rt = jnp.sqrt(S[:rank])
+        A = U[:, :rank] * rt[None, :]
+        B = Vt[:rank, :].T * rt[None, :]
+    return Qd, A, B, qstate
+
+
+def qlora_init(W: Array, cfg: QuantConfig, rank: int, key: Array | None = None):
+    """QLoRA baseline: NF4 RTN quantization + standard LoRA init
+    (A ~ N(0, 1/m) Kaiming-ish, B = 0) — zero perturbation at start."""
+    W = jnp.asarray(W, jnp.float32)
+    m, n = W.shape
+    nf4_cfg = QuantConfig(bits=4, group_size=cfg.group_size, fmt="nf4")
+    Qd, qstate = _rtn_roundtrip(W, nf4_cfg)
+    key = jax.random.PRNGKey(0) if key is None else key
+    A = jax.random.normal(key, (m, rank), jnp.float32) / jnp.sqrt(m)
+    B = jnp.zeros((n, rank), jnp.float32)
+    return Qd, A, B, qstate
+
+
+def gptq_lora_init(Qd: Array, m: int, n: int, rank: int,
+                   key: Array | None = None):
+    """GPTQ-LoRA baseline: OPTQ base (computed by caller) + zero LoRA init."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    A = jax.random.normal(key, (m, rank), jnp.float32) / jnp.sqrt(m)
+    B = jnp.zeros((n, rank), jnp.float32)
+    return A, B

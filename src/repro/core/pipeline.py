@@ -1,0 +1,304 @@
+"""End-to-end model quantization + LoRA-initialization driver.
+
+``quantize_model`` converts a dense param tree into the paper's deployment
+form: every block linear replaced by {qcodes, scales, zeros, lora_a, lora_b},
+with the base quantized by MagR→OPTQ against calibration Grams and the LoRA
+adapters initialized by CLoQ's closed form (or a baseline method).
+
+Calibration runs the model *eagerly* (``scan_layers=False``) so the
+name-scope capture hooks see concrete activations.  MoE experts carry
+per-expert Grams (E, D, D) and are quantized per expert via ``vmap``.  The
+zamba2-style shared block gets ONE quantized base from the pooled Gram and
+per-site LoRA from per-site Grams — CLoQ's data-driven init extended to
+weight-shared architectures (beyond-paper; DESIGN.md §5).
+
+Methods:
+    cloq       MagR -> OPTQ -> closed-form (A, B)          [the paper]
+    gptq       OPTQ -> standard LoRA init (A~N, B=0)       [GPTQ-LoRA]
+    loftq      data-free AltMin on ||Q + AB^T - W||        [LoftQ]
+    qlora      NF4 RTN -> standard LoRA init               [QLoRA]
+    rtn        INT RTN -> standard LoRA init
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cloq import cloq_init, regularize_gram
+from repro.core.loftq import loftq_init, qlora_init
+from repro.core.magr import magr_preprocess
+from repro.core.optq import optq_quantize
+from repro.core.quantizer import (QuantConfig, pack_codes, quantize_int,
+                                  quantize_nf4)
+from repro.models.modules import QSpec
+from repro.models.transformer import ModelConfig, forward
+from repro.utils import GramStore, capture_grams, get_path, set_path, tree_paths
+
+Array = jax.Array
+
+# param paths NOT quantized even though they hold a 2-D "w"
+_SKIP_SUFFIXES = ("embed.w", "head.w", "router.w")
+
+
+def qspec_to_qcfg(q: QSpec) -> QuantConfig:
+    return QuantConfig(bits=q.bits, group_size=q.group_size)
+
+
+def unstack_blocks(stacked, n: int) -> dict:
+    return {str(i): jax.tree.map(lambda a: a[i], stacked) for i in range(n)}
+
+
+def stack_blocks(d: dict):
+    ks = sorted(d, key=int)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[d[k] for k in ks])
+
+
+_STACK_KEYS = {"blocks": "n_layers", "enc_blocks": "n_enc_layers",
+               "dec_blocks": "n_layers", "cross": "n_layers"}
+
+
+def to_eager_params(params: dict, cfg: ModelConfig) -> dict:
+    """Unstack scan-stacked block params into per-layer dicts."""
+    if not cfg.scan_layers:
+        return params
+    out = dict(params)
+    for key, nattr in _STACK_KEYS.items():
+        if key in params:
+            out[key] = unstack_blocks(params[key], getattr(cfg, nattr))
+    return out
+
+
+def to_scan_params(params: dict, cfg: ModelConfig) -> dict:
+    out = dict(params)
+    for key in _STACK_KEYS:
+        if key in params and isinstance(params[key], dict) and \
+                all(k.isdigit() for k in params[key]):
+            out[key] = stack_blocks(params[key])
+    return out
+
+
+def quantizable_linear_paths(params: dict) -> list[str]:
+    """Paths of linear subtrees (ending at the dict holding 'w') that are
+    quantization targets: 2-D or stacked-3-D weights inside blocks."""
+    out = []
+    for path, leaf in tree_paths(params).items():
+        if not path.endswith(".w"):
+            continue
+        if any(path.endswith(sfx) for sfx in _SKIP_SUFFIXES):
+            continue
+        if "conv" in path.rsplit(".", 2)[-2]:
+            continue
+        if not hasattr(leaf, "ndim") or leaf.ndim not in (2, 3):
+            continue
+        if not any(seg in path for seg in
+                   ("blocks.", "shared.", "cross.")):
+            continue
+        out.append(path[: -len(".w")])
+    return sorted(out)
+
+
+def run_calibration(params: dict, cfg: ModelConfig,
+                    batches: Iterable[dict]) -> GramStore:
+    """Eager forward passes accumulating per-linear Grams."""
+    eager_cfg = dataclasses.replace(cfg, scan_layers=False, quant=None)
+    store = GramStore()
+    with capture_grams(store):
+        for batch in batches:
+            forward(params, eager_cfg, batch)
+    return store
+
+
+def _quantize_one(W: Array, H: Array | None, qspec: QSpec, method: str,
+                  key: Array):
+    """Quantize one (m, n) weight. Returns dict of new leaves."""
+    qcfg = qspec_to_qcfg(qspec)
+    m, n = W.shape
+    W = jnp.asarray(W, jnp.float32)
+    if method == "cloq":
+        assert H is not None, "cloq needs calibration Grams"
+        H = jnp.asarray(H, jnp.float32)
+        Wp = magr_preprocess(W, H, alpha=0.001 * float(jnp.trace(H) / m),
+                             iters=20) if qspec.bits <= 4 else W
+        Qd, Qc, s, z = optq_quantize(Wp, H, qcfg)
+        A, B = cloq_init(regularize_gram(H), W - Qd, qspec.rank, qspec.split)
+        return {"qcodes": pack_codes(Qc, qspec.bits), "scales": s, "zeros": z,
+                "lora_a": A, "lora_b": B}
+    if method == "gptq":
+        assert H is not None
+        Qd, Qc, s, z = optq_quantize(W, jnp.asarray(H, jnp.float32), qcfg)
+        A = jax.random.normal(key, (m, qspec.rank), jnp.float32) / np.sqrt(m)
+        B = jnp.zeros((n, qspec.rank), jnp.float32)
+        return {"qcodes": pack_codes(Qc, qspec.bits), "scales": s, "zeros": z,
+                "lora_a": A, "lora_b": B}
+    if method == "loftq":
+        Qd, A, B, qstate = loftq_init(W, qcfg, qspec.rank, iters=5)
+        codes, s, z = qstate
+        return {"qcodes": pack_codes(codes, qspec.bits), "scales": s,
+                "zeros": z, "lora_a": A, "lora_b": B}
+    if method == "qlora":
+        Qd, A, B, qstate = qlora_init(W, qcfg, qspec.rank, key)
+        codes, absmax = qstate
+        return {"qcodes": pack_codes(codes, 4), "absmax": absmax,
+                "lora_a": A, "lora_b": B}
+    if method == "rtn":
+        codes, s, z = quantize_int(W, qspec.bits, qspec.group_size)
+        A = jax.random.normal(key, (m, qspec.rank), jnp.float32) / np.sqrt(m)
+        B = jnp.zeros((n, qspec.rank), jnp.float32)
+        return {"qcodes": pack_codes(codes, qspec.bits), "scales": s,
+                "zeros": z, "lora_a": A, "lora_b": B}
+    raise ValueError(f"unknown method {method}")
+
+
+def _cast_for_model(leaves: dict, dtype) -> dict:
+    out = {}
+    for k, v in leaves.items():
+        if k in ("lora_a", "lora_b"):
+            out[k] = v.astype(dtype)
+        else:
+            out[k] = v
+    return out
+
+
+def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
+                   *, method: str = "cloq", qspec: QSpec | None = None,
+                   seed: int = 0,
+                   progress: Callable[[str], None] | None = None):
+    """Quantize all block linears of ``params``.
+
+    Returns (new_params in the input (scan/eager) layout, new_cfg with
+    ``quant=qspec`` set, gram_store)."""
+    qspec = qspec or cfg.quant or QSpec()
+    eparams = to_eager_params(params, cfg)
+    store = run_calibration(eparams, cfg, calib_batches)
+    new_params = jax.tree.map(lambda a: a, eparams)   # structural copy
+    key = jax.random.PRNGKey(seed)
+
+    for i, lin_path in enumerate(quantizable_linear_paths(eparams)):
+        key, sub = jax.random.split(key)
+        lin = dict(get_path(eparams, lin_path))
+        W = lin.pop("w")
+        is_shared = lin_path.startswith("shared.block.")
+        if is_shared:
+            scope_path = "shared." + lin_path[len("shared.block."):]
+        elif lin_path.startswith("cross."):
+            # param "cross.{i}.xattn.{q|k|v|o}" captured under scope
+            # "dec_blocks.{i}.cross.{q|k|v|o}"
+            _, i, _, name = lin_path.split(".")
+            scope_path = f"dec_blocks.{i}.cross.{name}"
+        else:
+            scope_path = lin_path
+        if progress:
+            progress(f"[{i}] {lin_path} {tuple(W.shape)}")
+
+        if W.ndim == 3:        # stacked MoE experts (E, m, n)
+            H = store.grams.get(scope_path)      # (E, D, D) or None
+            E = W.shape[0]
+            keys = jax.random.split(sub, E)
+            outs = []
+            for e in range(E):
+                He = None if H is None else H[e]
+                outs.append(_quantize_one(W[e], He, qspec, method, keys[e]))
+            newlin = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        elif is_shared:
+            # pooled Gram for the shared base; per-site Grams for site LoRA
+            rest = lin_path[len("shared.block."):]          # e.g. attn.q
+            site_paths = sorted(k for k in store.grams
+                                if k.startswith("sites.") and
+                                k.endswith(".shared." + rest))
+            pooled = None
+            for sp in site_paths:
+                g = store.grams[sp]
+                pooled = g.copy() if pooled is None else pooled + g
+            newlin = _quantize_one(W, pooled, qspec, method, sub)
+            A0, B0 = newlin.pop("lora_a"), newlin.pop("lora_b")
+            # per-site CLoQ adapters into shared.site_lora
+            lora_key = rest.replace(".", "_")
+            As, Bs = [], []
+            for sp in site_paths:
+                if method == "cloq":
+                    Hs = jnp.asarray(store.grams[sp], jnp.float32)
+                    from repro.core.quantizer import (dequantize_int,
+                                                      unpack_codes)
+                    codes = unpack_codes(newlin["qcodes"], qspec.bits, W.shape[0])
+                    Qd = dequantize_int(codes, newlin["scales"],
+                                        newlin["zeros"], qspec.group_size)
+                    A_s, B_s = cloq_init(regularize_gram(Hs), W - Qd,
+                                         qspec.rank, qspec.split)
+                else:
+                    A_s, B_s = A0, B0
+                As.append(A_s); Bs.append(B_s)
+            if As:
+                sl = dict(get_path(new_params, "shared.site_lora"))
+                sl[lora_key] = {"lora_a": jnp.stack(As).astype(cfg.dtype),
+                                "lora_b": jnp.stack(Bs).astype(cfg.dtype)}
+                set_path(new_params, "shared.site_lora", sl)
+        else:
+            H = store.grams.get(scope_path)
+            newlin = _quantize_one(W, H, qspec, method, sub)
+
+        keep = {k: v for k, v in lin.items()}     # bias etc.
+        keep.update(_cast_for_model(newlin, cfg.dtype))
+        set_path(new_params, lin_path, keep)
+
+    new_cfg = dataclasses.replace(cfg, quant=qspec)
+    if cfg.scan_layers:
+        new_params = to_scan_params(new_params, cfg)
+    return new_params, new_cfg, store
+
+
+# ---------------------------------------------------------------------------
+# Abstract quantized parameter shapes (dry-run: no allocation, no compute).
+# ---------------------------------------------------------------------------
+
+
+def _quant_leaf_shapes(m: int, n: int, qspec: QSpec, dtype,
+                       lead: tuple = ()) -> dict:
+    SDS = jax.ShapeDtypeStruct
+    g = m if qspec.group_size is None else qspec.group_size
+    mp = m * qspec.bits // 8 if qspec.bits in (2, 4) else m
+    return {
+        "qcodes": SDS(lead + (mp, n), jnp.uint8),
+        "scales": SDS(lead + (m // g, n), jnp.float32),
+        "zeros": SDS(lead + (m // g, n), jnp.float32),
+        "lora_a": SDS(lead + (m, qspec.rank), dtype),
+        "lora_b": SDS(lead + (n, qspec.rank), dtype),
+    }
+
+
+def quantized_param_shapes(cfg: ModelConfig):
+    """ShapeDtypeStruct tree of the post-quantization param layout, built
+    without running calibration or allocating anything."""
+    from repro.models.transformer import init_params
+    qspec = cfg.quant
+    assert qspec is not None, "cfg.quant must be set"
+    eager_cfg = dataclasses.replace(cfg, scan_layers=False)
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0),
+                                                eager_cfg))
+    shapes = jax.tree.map(lambda s: s, shapes)
+    for lin_path in quantizable_linear_paths(shapes):
+        lin = dict(get_path(shapes, lin_path))
+        W = lin.pop("w")
+        if W.ndim == 3:
+            E, m, n = W.shape
+            newlin = _quant_leaf_shapes(m, n, qspec, cfg.dtype, (E,))
+        else:
+            m, n = W.shape
+            newlin = _quant_leaf_shapes(m, n, qspec, cfg.dtype)
+        if lin_path.startswith("shared.block."):
+            newlin.pop("lora_a")
+            newlin.pop("lora_b")
+        lin.update(newlin)
+        set_path(shapes, lin_path, lin)
+    if cfg.scan_layers:
+        def stack_shapes(subtree, L):
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype), subtree)
+        for key, nattr in _STACK_KEYS.items():
+            if key in shapes:
+                per_layer = shapes[key]["0"]
+                shapes[key] = stack_shapes(per_layer, getattr(cfg, nattr))
+    return shapes

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: causal GQA flash attention (prefill hot-spot).
+
+Online-softmax blocking (Dao et al., adapted to TPU): grid
+(B*Hq, Sq/bq, Sk/bk) with the key loop innermost; running max m, running
+sum l, and the (bq x d) output accumulator live in VMEM scratch.  Causal
+blocks above the diagonal are masked; fully-masked key blocks still execute
+(Pallas grids are static) but contribute nothing — the ops.py wrapper notes
+the ~2x theoretical win a lower-triangular grid would add on real TPU.
+
+GQA: the q-head grid index maps to kv head q_head // (Hq // Hkv) via the
+BlockSpec index_map — no repeated K/V materialization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc, *,
+            scale, causal, bq, bk, nk):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc[...] = jnp.zeros_like(acc)
+
+    run = True
+    if causal:
+        # key block strictly above the diagonal band contributes nothing
+        run = (kb * bk) <= (qb * bq + bq - 1)
+
+    @pl.when(run if causal else True)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+        s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]                                  # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc[...] = acc[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _done():
+        o_ref[0] = (acc[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> Array:
+    """q (B, Hq, Sq, d); k/v (B, Hkv, Sk, d) -> (B, Hq, Sq, d)."""
+    B, Hq, Sq, d = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    nq, nk = Sq // bq, Sk // bk
+    scale = 1.0 / (d ** 0.5)
+
+    q4 = q.reshape(B * Hq, Sq, d)
+    k4 = k.reshape(B * Hkv, Sk, d)
+    v4 = v.reshape(B * Hkv, Sk, d)
+
+    def kv_map(h, qb, kb):
+        return (h // rep, kb, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+                          nk=nk),
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, qb, kb: (h, qb, 0)),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, qb, kb: (h, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q4, k4, v4)
+    return out.reshape(B, Hq, Sq, d)

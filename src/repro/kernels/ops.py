@@ -1,0 +1,67 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret=True`` (default here) emulates the kernels on CPU — the
+container has no TPU; on real hardware the launchers pass
+``interpret=False`` to lower through Mosaic.  Wrappers validate shapes and
+fall back to the pure-jnp reference for shapes the tiling cannot cover
+(non-multiple dims), so they are safe to call from model code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dequant_matmul import dequant_matmul as _dqmm
+from repro.kernels.dequant_matmul import dequant_matmul_lora as _dqmm_lora
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.gram import gram as _gram
+
+Array = jax.Array
+
+
+def _pack_factor(bits: int) -> int:
+    return 8 // bits if bits in (2, 4) else 1
+
+
+def dequant_matmul(x: Array, packed: Array, scales: Array, zeros: Array, *,
+                   bits: int, group_size: int, lora_a: Array | None = None,
+                   lora_b: Array | None = None, interpret: bool = True
+                   ) -> Array:
+    K = x.shape[-1]
+    N = packed.shape[-1]
+    g = K if group_size is None else group_size
+    M = int(jnp.asarray(x.shape[:-1]).prod()) if x.ndim > 1 else 1
+    tileable = (K % g == 0 and packed.shape[0] * _pack_factor(bits) == K)
+    # tiles need M, N, K covered by block multiples; fall back otherwise
+    if not tileable or M % 8 or N % 128 or K % g:
+        if lora_a is not None:
+            return ref.dequant_matmul_lora_ref(
+                x, packed, scales, zeros, lora_a, lora_b, bits=bits,
+                group_size=group_size)
+        return ref.dequant_matmul_ref(x, packed, scales, zeros, bits=bits,
+                                      group_size=group_size)
+    bm = 128 if M % 128 == 0 else (8 if M % 8 == 0 else M)
+    if lora_a is not None:
+        return _dqmm_lora(x, packed, scales, zeros, lora_a, lora_b, bits=bits,
+                          group_size=group_size, bm=bm, interpret=interpret)
+    return _dqmm(x, packed, scales, zeros, bits=bits, group_size=group_size,
+                 bm=bm, interpret=interpret)
+
+
+def gram(x: Array, *, interpret: bool = True) -> Array:
+    D = x.shape[-1]
+    T = int(jnp.asarray(x.shape[:-1]).prod())
+    if D % 128 or T % 8:
+        return ref.gram_ref(x.reshape(-1, D))
+    bt = 512 if T % 512 == 0 else (8 if T % 8 == 0 else T)
+    return _gram(x, bt=bt, interpret=interpret)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    interpret: bool = True) -> Array:
+    B, Hq, Sq, d = q.shape
+    Sk = k.shape[2]
+    if Sq % 128 or Sk % 128 or d % 8:
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return _flash(q, k, v, causal=causal, interpret=interpret)

@@ -1,0 +1,378 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+        --cell train_4k [--multi-pod] [--bits 4] [--out results/dryrun]
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  2. constructs the abstract quantized+LoRA state (ShapeDtypeStruct, no
+     allocation) and its NamedShardings from launch/shardings.py rules;
+  3. ``jit(step).lower(...).compile()`` — success proves the sharding
+     config is coherent for 512 devices;
+  4. records ``memory_analysis()`` / ``cost_analysis()`` and the collective
+     ops parsed from the compiled HLO (op kind, dtype, shape, bytes,
+     while-loop trip-count multiplier) into a JSON for §Roofline.
+
+cost_analysis() counts scan bodies ONCE (verified), so the roofline layer
+uses depth extrapolation: this driver can also lower reduced-depth UNROLLED
+variants (--depth-probe) whose costs the roofline harness extrapolates to
+the full depth (benchmarks/roofline.py).
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+
+import jax
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing.
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\([^)]*\)|(\w+)\[([\d,]*)\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+
+
+def _computation_of_lines(hlo: str):
+    """Yield (computation_name, line) pairs."""
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = _COMP_RE.match(s)
+        if m and s.endswith("{"):
+            cur = m.group(1)
+            continue
+        yield cur, s
+
+
+def computation_multipliers(hlo: str) -> dict[str, int]:
+    """Execution-count multiplier per computation: the product of
+    ``known_trip_count``s of all enclosing while loops (nested scans
+    compose multiplicatively)."""
+    parent_trip: dict[str, tuple[str, int]] = {}   # body -> (parent, trip)
+    for comp, line in _computation_of_lines(hlo):
+        wm = _WHILE_RE.search(line)
+        if wm:
+            tm = _TRIP_RE.search(line)
+            trip = int(tm.group(1)) if tm else 1
+            parent_trip[wm.group(2)] = (comp or "__entry__", trip)
+
+    mult: dict[str, int] = {}
+
+    def resolve(body: str, seen=()) -> int:
+        if body in mult:
+            return mult[body]
+        if body not in parent_trip or body in seen:
+            return 1
+        parent, trip = parent_trip[body]
+        m = trip * resolve(parent, seen + (body,))
+        mult[body] = m
+        return m
+
+    for body in list(parent_trip):
+        resolve(body)
+    return mult
+
+
+def parse_collectives(hlo: str) -> list[dict]:
+    """Parse collective ops with bytes and the computation they live in."""
+    out = []
+    for comp, stripped in _computation_of_lines(hlo):
+        cm = _COLL_RE.search(stripped)
+        if cm:
+            name, dtype, dims, kind = (cm.group(1), cm.group(2), cm.group(3),
+                                       cm.group(4))
+            if dtype is None:
+                # tuple-shaped result: sum element shapes
+                tup = re.findall(r"(\w+)\[([\d,]*)\]", stripped.split("=")[1]
+                                 .split(kind)[0])
+                nbytes = sum(_shape_bytes(d, s) for d, s in tup)
+                dtype = tup[0][0] if tup else "f32"
+            else:
+                nbytes = _shape_bytes(dtype, dims)
+            out.append({"name": name, "kind": kind, "dtype": dtype,
+                        "bytes": nbytes, "computation": comp})
+    return out
+
+
+def collective_summary(hlo: str) -> dict:
+    colls = parse_collectives(hlo)
+    mults = computation_multipliers(hlo)
+    total = 0
+    per_kind: dict[str, float] = {}
+    for c in colls:
+        mult = mults.get(c["computation"], 1)
+        b = c["bytes"] * mult
+        c["multiplier"] = mult
+        total += b
+        per_kind[c["kind"]] = per_kind.get(c["kind"], 0) + b
+    return {"ops": colls, "total_bytes": float(total),
+            "per_kind": {k: float(v) for k, v in per_kind.items()},
+            "n_ops": len(colls)}
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering.
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(arch: str, cell: str, *, multi_pod: bool = False,
+               bits: int = 4, depth: int | None = None,
+               unroll: bool = False, remat: str = "full",
+               moe_dense: bool = False, verbose: bool = True,
+               loss_chunk: int = 0, attn_chunk: int = 0,
+               seq_shard: bool = False, dp_only: bool = False,
+               prefill_last: bool = False, microbatch: int = 1,
+               ssm_chunk: int = 0, kv8: bool = False) -> dict:
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh, pcontext_for
+    from repro.launch.steps import (SHAPE_CELLS, abstract_cache,
+                                    abstract_state, batch_pspecs,
+                                    batch_specs, cell_applicable,
+                                    make_decode_step, make_train_step,
+                                    make_prefill_step, state_pspecs, named,
+                                    abstract_params)
+    from repro.launch.shardings import cache_specs, param_specs
+    from repro.models.modules import QSpec
+    from repro.optim import OptConfig
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    qspec = QSpec(bits=bits, group_size=64, rank=64)
+    overrides: dict = {"quant": qspec}
+    if depth is not None:
+        overrides["n_layers"] = depth
+        cfg0 = get_config(arch)
+        if cfg0.family == "encdec":
+            overrides["n_enc_layers"] = depth
+    if unroll:
+        overrides["scan_layers"] = False
+    overrides["remat"] = remat
+    if moe_dense:
+        overrides["capacity_factor"] = 2.0
+    if loss_chunk:
+        overrides["loss_chunk"] = loss_chunk
+    if attn_chunk:
+        overrides["attn_chunk"] = attn_chunk
+    if seq_shard:
+        overrides["seq_shard"] = True
+    if ssm_chunk:
+        overrides["ssm_chunk"] = ssm_chunk
+    cfg = get_config(arch, **overrides)
+
+    ok, why = cell_applicable(cfg, cell)
+    if not ok:
+        return {"arch": arch, "cell": cell, "skipped": True, "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pctx = pcontext_for(mesh)
+    if dp_only:
+        # pure data parallelism: quantized base + LoRA replicated per chip,
+        # the whole mesh is one data axis — no per-layer TP collectives;
+        # only the (tiny) LoRA gradient all-reduce remains (§Perf lever for
+        # small-model LoRA fine-tuning; not applicable to EP/MoE archs)
+        assert cfg.family != "moe", "dp_only not defined for EP archs"
+        from repro.models.parallel import PContext
+        all_axes = tuple(mesh.axis_names)
+        pctx = PContext(mesh=mesh, data_axes=all_axes, model_axis="model")
+    kind = SHAPE_CELLS[cell]["kind"]
+    t0 = time.time()
+
+    if kind == "train":
+        ocfg = OptConfig(total_steps=1000, microbatch=microbatch)
+        state_shapes = abstract_state(cfg, ocfg)
+        if dp_only:
+            st_specs = jax.tree.map(
+                lambda s: P(*([None] * len(s.shape))), state_shapes)
+        else:
+            st_specs = state_pspecs(state_shapes, mesh)
+        b_specs = batch_pspecs(cfg, cell, pctx.data_axes)
+        step = make_train_step(cfg, ocfg, pctx)
+        jitted = jax.jit(step,
+                         in_shardings=(named(st_specs, mesh),
+                                       named(b_specs, mesh)),
+                         out_shardings=(named(st_specs, mesh), None),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state_shapes, batch_specs(cfg, cell))
+    elif kind == "prefill":
+        pshapes = abstract_params(cfg)
+        p_specs = param_specs(pshapes, mesh)
+        if dp_only:
+            p_specs = jax.tree.map(lambda s: P(*([None] * len(s))), p_specs,
+                                   is_leaf=lambda x: isinstance(x, P))
+        b_specs = batch_pspecs(cfg, cell, pctx.data_axes)
+        step = make_prefill_step(cfg, pctx, last_only=prefill_last)
+        jitted = jax.jit(step, in_shardings=(named(p_specs, mesh),
+                                             named(b_specs, mesh)))
+        lowered = jitted.lower(pshapes, batch_specs(cfg, cell))
+    else:  # decode
+        pshapes = abstract_params(cfg)
+        p_specs = param_specs(pshapes, mesh)
+        # f8 KV cache (beyond-paper §Perf lever): halves the HBM traffic of
+        # the memory-bound decode GEMV attention reads; decode writes cast
+        # to the cache dtype, attention upcasts to f32 in the softmax
+        kv_dtype = jax.numpy.float8_e4m3fn if kv8 else None
+        cache_shapes = abstract_cache(cfg, cell, kv_dtype)
+        c_specs = cache_specs(cfg, cache_shapes, mesh, pctx.data_axes)
+        B = SHAPE_CELLS[cell]["batch"]
+        tok_spec = P(pctx.data_axes if B > 1 else None, None)
+        step = make_decode_step(cfg, pctx)
+        jitted = jax.jit(
+            step,
+            in_shardings=(named(p_specs, mesh), named(c_specs, mesh),
+                          NamedSharding(mesh, tok_spec)),
+            donate_argnums=(1,))
+        tokens = jax.ShapeDtypeStruct((B, 1), jax.numpy.int32)
+        lowered = jitted.lower(pshapes, cache_shapes, tokens)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = collective_summary(hlo)
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    result = {
+        "arch": arch, "cell": cell,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "multi_pod": multi_pod, "bits": bits, "depth": depth,
+        "unroll": unroll, "remat": remat, "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost": {"flops": float(cost.get("flops", 0.0)),
+                 "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+        "collectives": {"total_bytes": colls["total_bytes"],
+                        "per_kind": colls["per_kind"],
+                        "n_ops": colls["n_ops"]},
+    }
+    if verbose:
+        print(json.dumps({k: v for k, v in result.items()
+                          if k != "collectives_ops"}, indent=1))
+    return result
+
+
+def sweep(out: str, bits: int, archs=None, cells=None, meshes=("single", "multi"),
+          force: bool = False) -> int:
+    from repro.configs import ARCH_IDS, ALIASES
+    from repro.launch.steps import SHAPE_CELLS
+    inv = {v: k for k, v in ALIASES.items()}
+    archs = archs or [inv[a] for a in ARCH_IDS]
+    cells = cells or list(SHAPE_CELLS)
+    os.makedirs(out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for cell in cells:
+            for mesh_kind in meshes:
+                tag = f"{arch}.{cell}.{mesh_kind}"
+                path = os.path.join(out, tag + ".json")
+                if os.path.exists(path) and not force:
+                    print("skip (cached)", tag)
+                    continue
+                t0 = time.time()
+                try:
+                    res = lower_cell(arch, cell,
+                                     multi_pod=(mesh_kind == "multi"),
+                                     bits=bits, verbose=False)
+                except Exception as e:  # record the failure, keep sweeping
+                    res = {"arch": arch, "cell": cell, "mesh": mesh_kind,
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                status = ("SKIP" if res.get("skipped")
+                          else "FAIL" if res.get("error") else "ok")
+                print(f"[{status}] {tag}  ({time.time() - t0:.0f}s)",
+                      flush=True)
+    return failures
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--cell", default=None)
+    p.add_argument("--sweep", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--bits", type=int, default=4)
+    p.add_argument("--depth", type=int, default=None,
+                   help="override layer count (depth-probe for roofline)")
+    p.add_argument("--unroll", action="store_true",
+                   help="unrolled layers (depth-probe costs)")
+    p.add_argument("--remat", default="full",
+                   choices=["full", "dots", "tp_out", "none"])
+    p.add_argument("--loss-chunk", type=int, default=0)
+    p.add_argument("--attn-chunk", type=int, default=0)
+    p.add_argument("--seq-shard", action="store_true")
+    p.add_argument("--dp-only", action="store_true")
+    p.add_argument("--prefill-last", action="store_true")
+    p.add_argument("--microbatch", type=int, default=1)
+    p.add_argument("--ssm-chunk", type=int, default=0)
+    p.add_argument("--kv8", action="store_true")
+    p.add_argument("--tag", default="", help="suffix for the output file")
+    p.add_argument("--out", default="results/dryrun")
+    args = p.parse_args(argv)
+
+    if args.sweep:
+        archs = [args.arch] if args.arch else None
+        cells = [args.cell] if args.cell else None
+        return 1 if sweep(args.out, args.bits, archs, cells) else 0
+
+    res = lower_cell(args.arch, args.cell, multi_pod=args.multi_pod,
+                     bits=args.bits, depth=args.depth, unroll=args.unroll,
+                     remat=args.remat, loss_chunk=args.loss_chunk,
+                     attn_chunk=args.attn_chunk, seq_shard=args.seq_shard,
+                     dp_only=args.dp_only, prefill_last=args.prefill_last,
+                     microbatch=args.microbatch, ssm_chunk=args.ssm_chunk,
+                     kv8=args.kv8)
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"{args.arch}.{args.cell}.{'multi' if args.multi_pod else 'single'}"
+    if args.depth:
+        tag += f".d{args.depth}{'u' if args.unroll else ''}"
+    if args.remat != "full":
+        tag += f".{args.remat}"
+    if args.tag:
+        tag += f".{args.tag}"
+    path = os.path.join(args.out, tag + ".json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    print("wrote", path)
+    return 0 if not res.get("error") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init; smoke tests see
+one device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(n_data: int = 1, n_model: int = 1, n_pod: int | None = None):
+    """Small mesh over however many (possibly fake) devices exist."""
+    if n_pod:
+        return jax.make_mesh((n_pod, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def data_axes_of(mesh) -> tuple:
+    return tuple(ax for ax in mesh.axis_names if ax in ("pod", "data"))
+
+
+def pcontext_for(mesh):
+    from repro.models.parallel import PContext
+    da = data_axes_of(mesh)
+    return PContext(mesh=mesh, data_axes=da if len(da) > 1 else da[0],
+                    model_axis="model")

@@ -1,0 +1,179 @@
+"""Param-path -> PartitionSpec rules (GSPMD logical sharding).
+
+Orientation of every linear in the zoo:
+    col  — output dim TP-sharded over "model"   (q/k/v, gate/up, z/x_proj, head)
+    row  — input  dim TP-sharded over "model"   (o, down, out_proj)
+    rep  — replicated                           (bc/dt_proj, router, norms)
+MoE expert stacks shard the EXPERT dim over "model" (EP) with no intra-
+expert TP.  Quantized leaves (qcodes/scales/zeros/absmax) follow their
+weight's orientation; LoRA splits so that the TP-sharded side matches the
+base ("col": lora_b output-sharded; "row": lora_a input-sharded).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.transformer import ModelConfig
+from repro.utils import tree_paths, set_path
+
+COL = {"q", "k", "v", "gate", "up", "z_proj", "x_proj", "head"}
+ROW = {"o", "down", "out_proj"}
+REP = {"bc_proj", "dt_proj", "router"}
+
+# leaf kind -> (spec for col, row, rep); dims are the rule's trailing dims
+_LEAF_RULES = {
+    "w":      ((None, "model"), ("model", None), (None, None)),
+    "qcodes": ((None, "model"), ("model", None), (None, None)),
+    "scales": ((None, "model"), ("model", None), (None, None)),
+    "zeros":  ((None, "model"), ("model", None), (None, None)),
+    "absmax": ((None, "model"), ("model", None), (None, None)),
+    "lora_a": ((None, None),    ("model", None), (None, None)),
+    "lora_b": (("model", None), (None, None),    (None, None)),
+    "b":      (("model",),      (None,),         (None,)),
+}
+
+
+def _orientation(path: str) -> str:
+    segs = path.split(".")
+    for s in reversed(segs[:-1]):
+        base = s
+        if base in COL:
+            return "col"
+        if base in ROW:
+            return "row"
+        if base in REP:
+            return "rep"
+        # hybrid site_lora keys like "mlp_down"
+        if "_" in base:
+            tail = base.split("_")[-1]
+            if tail in COL:
+                return "col"
+            if tail in ROW:
+                return "row"
+    return "rep"
+
+
+def spec_for_path(path: str, ndim: int) -> P:
+    segs = path.split(".")
+    leaf = segs[-1]
+    if path.endswith("embed.w"):
+        return P("model", None)
+    if leaf in ("conv_x", "conv_x_b"):
+        return P(*([None] * (ndim - 1) + ["model"])) if ndim >= 1 else P()
+    if leaf not in _LEAF_RULES:
+        return P(*([None] * ndim))
+    rules = _LEAF_RULES[leaf]
+    orient = _orientation(path)
+    tail = {"col": rules[0], "row": rules[1], "rep": rules[2]}[orient]
+    if ".moe." in f".{path}." and "router" not in path:
+        # expert stack: base rank = 1 (E) + rule rank; EP over "model",
+        # intra-expert replicated; extra leading dims (layer stack) -> None
+        base = 1 + len(tail)
+        pad = ndim - base
+        if pad < 0:
+            return P(*([None] * ndim))
+        return P(*([None] * pad + ["model"] + [None] * len(tail)))
+    pad = ndim - len(tail)
+    if pad < 0:  # e.g. scalar bias on a rule expecting 2 dims
+        return P(*([None] * ndim))
+    return P(*([None] * pad + list(tail)))
+
+
+def param_specs(shapes_tree, mesh=None) -> dict:
+    """Pytree of PartitionSpec matching a (ShapeDtypeStruct or array) tree.
+
+    With ``mesh``, axis assignments whose dimension is not divisible by the
+    mesh-axis size are dropped (replicated) — e.g. group-scale rows (m/64)
+    on row-parallel layers with m/64 % 16 != 0."""
+    out: dict = {}
+    for path, leaf in tree_paths(shapes_tree).items():
+        nd = len(leaf.shape) if hasattr(leaf, "shape") else 0
+        sp = spec_for_path(path, nd)
+        if len(sp) != nd:          # 0-size placeholders, scalars, etc.
+            sp = P(*([None] * nd))
+        elif mesh is not None:
+            dims = []
+            for size, ax in zip(leaf.shape, sp):
+                ok = ax is None or (
+                    size % int(np.prod([mesh.shape[a] for a in
+                                        ((ax,) if isinstance(ax, str) else ax)]))
+                    == 0)
+                dims.append(ax if ok else None)
+            sp = P(*dims)
+        set_path(out, path, sp)
+    return out
+
+
+def _divisible(n: int, mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+def cache_specs(cfg: ModelConfig, cache_tree, mesh, data_axes) -> dict:
+    """Decode-cache PartitionSpecs.
+
+    KV caches (L, B, T, Hkv, hd): batch over data axes; heads over "model"
+    when divisible, else the sequence dim over "model" (distributed-softmax
+    decode).  SSM states shard heads over "model"; batch=1 long-context
+    cells leave the data axes unused (documented)."""
+    dp = data_axes
+    specs: dict = {}
+    flat = tree_paths(cache_tree)
+    batch = None
+    for path, leaf in flat.items():
+        if path in ("k", "v") or path.endswith(".k") or path.endswith(".v"):
+            L, B, T, H, hd = leaf.shape
+            bspec = dp if _bdiv(B, mesh, dp) else None
+            if _divisible(H, mesh, "model"):
+                specs[path] = P(None, bspec, None, "model", None)
+            elif _divisible(T, mesh, "model"):
+                specs[path] = P(None, bspec, "model", None, None)
+            else:
+                specs[path] = P(None, bspec, None, None, None)
+        elif path.endswith("state"):
+            L, B, H, pd, n = leaf.shape
+            bspec = dp if _bdiv(B, mesh, dp) else None
+            hspec = "model" if _divisible(H, mesh, "model") else None
+            specs[path] = P(None, bspec, hspec, None, None)
+        elif path.endswith("conv_x"):
+            L, B, K, C = leaf.shape
+            bspec = dp if _bdiv(B, mesh, dp) else None
+            cspec = "model" if _divisible(C, mesh, "model") else None
+            specs[path] = P(None, bspec, None, cspec)
+        elif path.endswith("conv_bc"):
+            L, B, K, C = leaf.shape
+            bspec = dp if _bdiv(B, mesh, dp) else None
+            specs[path] = P(None, bspec, None, None)
+        elif path.endswith("enc_out"):
+            B, S, D = leaf.shape
+            bspec = dp if _bdiv(B, mesh, dp) else None
+            specs[path] = P(bspec, None, None)
+        else:  # idx scalars
+            specs[path] = P(*([None] * len(leaf.shape)))
+    out: dict = {}
+    for pth, sp in specs.items():
+        set_path(out, pth, sp)
+    return out
+
+
+def _bdiv(b: int, mesh, dp) -> bool:
+    axes = (dp,) if isinstance(dp, str) else tuple(dp)
+    total = 1
+    for ax in axes:
+        if ax not in mesh.axis_names:
+            return False
+        total *= mesh.shape[ax]
+    return b % total == 0
+
+
+def to_named(specs_tree, mesh):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, mesh, spec: P):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

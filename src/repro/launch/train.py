@@ -1,0 +1,175 @@
+"""Fine-tuning driver with fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+        --method cloq --bits 2 --steps 50
+
+Fault tolerance (DESIGN.md §4):
+  * checkpoint every ``--ckpt-every`` steps (atomic, retained, async) with
+    the data-iterator state inside ``meta``;
+  * ``--resume`` restores the newest checkpoint and reshards it onto the
+    *current* mesh (elastic restart after resizing the data axis);
+  * SIGTERM/SIGINT triggers a synchronous final checkpoint (preemption);
+  * straggler detection: per-step wall time is tracked against the running
+    median; steps slower than ``--straggler-factor`` x median are logged
+    with the step index (on a real cluster this feeds the requeue policy —
+    single-process simulation documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import statistics
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_smoke_config
+from repro.core.pipeline import quantize_model
+from repro.data import DataConfig, TokenStream
+from repro.launch.steps import build_state, make_train_step
+from repro.models.modules import QSpec
+from repro.models.parallel import LOCAL
+from repro.models.transformer import init_params
+from repro.optim import OptConfig, merge_params
+from repro.utils import tree_paths, set_path
+
+
+def parse_args(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced config (CPU-runnable)")
+    p.add_argument("--method", default="cloq",
+                   choices=["cloq", "gptq", "loftq", "qlora", "rtn", "none"])
+    p.add_argument("--bits", type=int, default=4)
+    p.add_argument("--group-size", type=int, default=64)
+    p.add_argument("--rank", type=int, default=64)
+    p.add_argument("--split", default="paper")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--schedule", default="cosine",
+                   choices=["const", "linear", "cosine", "wsd"])
+    p.add_argument("--seq-len", type=int, default=128)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--calib-batches", type=int, default=4)
+    p.add_argument("--pretrain-steps", type=int, default=0,
+                   help="optional full-precision warm start (smoke demos)")
+    p.add_argument("--ckpt-dir", default="")
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--resume", action="store_true")
+    p.add_argument("--straggler-factor", type=float, default=3.0)
+    p.add_argument("--seed", type=int, default=0)
+    return p.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.smoke and args.group_size > cfg.d_model:
+        args.group_size = min(args.group_size, 16)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(key, cfg)
+
+    kind = ("encdec" if cfg.family == "encdec"
+            else "vlm" if cfg.frontend == "vision" else "lm")
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                      global_batch=args.batch, seed=args.seed, kind=kind,
+                      enc_len=max(args.seq_len // 4, 8),
+                      n_prefix=cfg.n_prefix, d_model=cfg.d_model)
+    stream = TokenStream(dcfg)
+
+    if args.pretrain_steps:
+        ocfg0 = OptConfig(lr=3e-3, trainable="all",
+                          total_steps=args.pretrain_steps, schedule="cosine")
+        st0 = build_state(params, ocfg0)
+        fn0 = jax.jit(make_train_step(cfg, ocfg0, LOCAL))
+        for _ in range(args.pretrain_steps):
+            st0, m0 = fn0(st0, stream.next_batch())
+        params = merge_params(st0["train"], st0["frozen"])
+        print(f"[pretrain] {args.pretrain_steps} steps, "
+              f"loss={float(m0['loss']):.4f}")
+
+    if args.method != "none":
+        qspec = QSpec(bits=args.bits, group_size=args.group_size,
+                      rank=args.rank, method=args.method, split=args.split)
+        calib = [stream.next_batch() for _ in range(args.calib_batches)]
+        t0 = time.time()
+        params, cfg, _ = quantize_model(params, cfg, calib,
+                                        method=args.method, qspec=qspec)
+        print(f"[quantize] method={args.method} bits={args.bits} "
+              f"took {time.time() - t0:.1f}s")
+        trainable = "lora"
+    else:
+        trainable = "all"
+
+    ocfg = OptConfig(lr=args.lr, trainable=trainable, total_steps=args.steps,
+                     schedule=args.schedule)
+    state = build_state(params, ocfg)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, LOCAL))
+
+    ckpt = None
+    start_step = 0
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir, keep=3, every=args.ckpt_every)
+        if args.resume and ckpt.latest_step() is not None:
+            tree, meta = ckpt.restore()
+            flat = tree_paths(tree)
+            rebuilt: dict = {}
+            for pth, leaf in flat.items():
+                set_path(rebuilt, pth, jnp.asarray(leaf))
+            state = rebuilt
+            stream.load_state_dict(meta["data"])
+            start_step = meta["step"]
+            print(f"[resume] step {start_step}")
+
+    stop = {"flag": False}
+
+    def on_signal(signum, frame):
+        stop["flag"] = True
+
+    signal.signal(signal.SIGTERM, on_signal)
+    signal.signal(signal.SIGINT, on_signal)
+
+    times: list[float] = []
+    for step in range(start_step, args.steps):
+        t0 = time.time()
+        state, metrics = step_fn(state, stream.next_batch())
+        dt = time.time() - t0
+        if len(times) >= 5:
+            med = statistics.median(times[-50:])
+            if dt > args.straggler_factor * med:
+                print(f"[straggler] step {step} took {dt:.3f}s "
+                      f"(median {med:.3f}s) — would requeue on cluster")
+        times.append(dt)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step} loss={float(metrics['loss']):.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} ({dt * 1e3:.0f}ms)")
+        if ckpt is not None:
+            ckpt.maybe_save(step + 1, state,
+                            {"data": stream.state_dict(), "step": step + 1})
+        if stop["flag"]:
+            print(f"[preempt] signal received — checkpointing at {step + 1}")
+            if ckpt is not None:
+                ckpt.maybe_save(step + 1, state,
+                                {"data": stream.state_dict(),
+                                 "step": step + 1}, force=True)
+                ckpt.wait()
+            return 0
+    if ckpt is not None:
+        ckpt.maybe_save(args.steps, state,
+                        {"data": stream.state_dict(), "step": args.steps},
+                        force=True)
+        ckpt.wait()
+    print("[done]", json.dumps({"final_loss": float(metrics["loss"])}))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

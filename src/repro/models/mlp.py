@@ -1,0 +1,49 @@
+"""SwiGLU / GELU MLP blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import QSpec, linear_apply, linear_init
+from repro.utils import scope
+
+Array = jax.Array
+
+
+def swiglu_init(key, d_model: int, d_ff: int, *, dtype=jnp.bfloat16,
+                lora_rank: int = 0) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "gate": linear_init(ks[0], d_model, d_ff, dtype=dtype, lora_rank=lora_rank),
+        "up": linear_init(ks[1], d_model, d_ff, dtype=dtype, lora_rank=lora_rank),
+        "down": linear_init(ks[2], d_ff, d_model, dtype=dtype, lora_rank=lora_rank),
+    }
+
+
+def swiglu_apply(p, x: Array, qspec: QSpec | None = None) -> Array:
+    with scope("gate"):
+        g = linear_apply(p["gate"], x, qspec)
+    with scope("up"):
+        u = linear_apply(p["up"], x, qspec)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    with scope("down"):
+        return linear_apply(p["down"], h, qspec)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, *, dtype=jnp.bfloat16,
+                  lora_rank: int = 0, bias: bool = True) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "up": linear_init(ks[0], d_model, d_ff, dtype=dtype, bias=bias,
+                          lora_rank=lora_rank),
+        "down": linear_init(ks[1], d_ff, d_model, dtype=dtype, bias=bias,
+                            lora_rank=lora_rank),
+    }
+
+
+def gelu_mlp_apply(p, x: Array, qspec: QSpec | None = None) -> Array:
+    with scope("up"):
+        h = linear_apply(p["up"], x, qspec)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    with scope("down"):
+        return linear_apply(p["down"], h, qspec)

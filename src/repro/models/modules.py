@@ -1,0 +1,120 @@
+"""Minimal functional module system: init fns return nested param dicts,
+apply fns consume them.  No flax dependency.
+
+Linear layers are the quantization surface: ``linear_apply`` transparently
+handles dense bf16 weights, packed-quantized weights (OPTQ/CLoQ state), and
+LoRA adapters, and records calibration activations when inside a
+``capture_grams`` context (eager only).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import dequantize_int, unpack_codes
+from repro.utils import current_scope, record_activation
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QSpec:
+    """Static quantization spec threaded through model configs."""
+    bits: int = 4
+    group_size: int = 64
+    rank: int = 64
+    method: str = "cloq"          # cloq | loftq | rtn | gptq | qlora(nf4)
+    split: str = "paper"
+    use_kernel: bool = False      # Pallas dequant-matmul (tests/benchmarks)
+
+
+def _init_dense(key, m, n, dtype, scale=None):
+    scale = (1.0 / jnp.sqrt(m)) if scale is None else scale
+    return (jax.random.normal(key, (m, n), jnp.float32) * scale).astype(dtype)
+
+
+def linear_init(key, m: int, n: int, *, dtype=jnp.bfloat16, bias: bool = False,
+                lora_rank: int = 0, scale=None) -> dict:
+    keys = jax.random.split(key, 3)
+    p = {"w": _init_dense(keys[0], m, n, dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((n,), dtype)
+    if lora_rank:
+        p["lora_a"] = (jax.random.normal(keys[1], (m, lora_rank), jnp.float32)
+                       / jnp.sqrt(m)).astype(dtype)
+        p["lora_b"] = jnp.zeros((n, lora_rank), dtype)
+    return p
+
+
+def linear_apply(p: dict, x: Array, qspec: QSpec | None = None) -> Array:
+    """y = x @ W (+ LoRA path + bias). W may be dense or packed-quantized."""
+    record_activation(current_scope(), x)
+    m = x.shape[-1]
+    if "qcodes" in p:
+        assert qspec is not None, "quantized params need a QSpec"
+        if "absmax" in p:                      # NF4 (QLoRA baseline)
+            from repro.core.quantizer import dequantize_nf4
+            codes = unpack_codes(p["qcodes"], 4, m)
+            w = dequantize_nf4(codes, p["absmax"], qspec.group_size, x.dtype)
+            y = x @ w
+        elif qspec.use_kernel:
+            from repro.kernels import ops as kops
+            y = kops.dequant_matmul(x, p["qcodes"], p["scales"], p["zeros"],
+                                    bits=qspec.bits, group_size=qspec.group_size)
+        else:
+            codes = unpack_codes(p["qcodes"], qspec.bits, m)
+            w = dequantize_int(codes, p["scales"], p["zeros"],
+                               qspec.group_size, dtype=x.dtype)
+            y = x @ w
+    else:
+        y = x @ p["w"].astype(x.dtype)
+    if "lora_a" in p:
+        a = p["lora_a"].astype(x.dtype)
+        b = p["lora_b"].astype(x.dtype)
+        y = y + (x @ a) @ b.T
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p: dict, x: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.bfloat16) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p: dict, x: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> dict:
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return {"w": w.astype(dtype)}
+
+
+def embedding_apply(p: dict, tokens: Array) -> Array:
+    return jnp.take(p["w"], tokens, axis=0)
+
+
+def lm_head_apply(p: dict, x: Array) -> Array:
+    """Logits. ``p`` may be a tied embedding ({'w': (V, d)}) or a linear."""
+    w = p["w"].astype(x.dtype)
+    if w.shape[0] != x.shape[-1]:          # tied embedding (V, d)
+        return x @ w.T
+    return x @ w

@@ -1,0 +1,20 @@
+"""Parallel context threaded through model apply functions."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PContext:
+    """Mesh + axis-name bundle.  ``mesh=None`` => single-device eager path."""
+    mesh: Any = None
+    data_axes: Any = "data"       # str or tuple, e.g. ("pod", "data")
+    model_axis: str = "model"
+
+    @property
+    def data_axis_tuple(self) -> tuple:
+        return (self.data_axes,) if isinstance(self.data_axes, str) else tuple(self.data_axes)
+
+
+LOCAL = PContext()

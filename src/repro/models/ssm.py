@@ -1,0 +1,228 @@
+"""Mamba2 / SSD (state-space duality) block, JAX implementation.
+
+Training/prefill uses the chunked SSD algorithm (Dao & Gu 2024): quadratic
+attention-like compute within chunks + a linear recurrence across chunk
+states (``lax.scan``).  Decode is the O(1)-per-token recurrent update on the
+(B, H, P, N) state.
+
+TPU adaptation (DESIGN.md §3): the reference CUDA implementation fuses
+[z, x, B, C, dt] into one ``in_proj`` for kernel-launch efficiency.  Here the
+projections are SEPARATE linears (z_proj / x_proj / bc_proj / dt_proj) so
+each shards cleanly over the model axis under GSPMD (heads for z/x,
+replicated for the small B/C/dt) — fused projection would force unaligned
+slices of a sharded dimension.  Each projection goes through the quantizable
+``linear_apply`` path, so CLoQ applies to SSM archs unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import (QSpec, linear_apply, linear_init,
+                                  rmsnorm_apply, rmsnorm_init)
+from repro.utils import scope
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128            # N
+    head_dim: int = 64            # P
+    expand: int = 2
+    n_groups: int = 1
+    conv_kernel: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def d_bc(self) -> int:
+        return 2 * self.n_groups * self.d_state
+
+
+def mamba_init(key, cfg: SSMConfig, *, dtype=jnp.bfloat16,
+               lora_rank: int = 0) -> dict:
+    ks = jax.random.split(key, 6)
+    h = cfg.n_heads
+    return {
+        "z_proj": linear_init(ks[0], cfg.d_model, cfg.d_inner, dtype=dtype,
+                              lora_rank=lora_rank),
+        "x_proj": linear_init(ks[1], cfg.d_model, cfg.d_inner, dtype=dtype,
+                              lora_rank=lora_rank),
+        "bc_proj": linear_init(ks[2], cfg.d_model, cfg.d_bc, dtype=dtype,
+                               lora_rank=lora_rank),
+        "dt_proj": linear_init(ks[3], cfg.d_model, h, dtype=dtype,
+                               lora_rank=lora_rank),
+        "out_proj": linear_init(ks[4], cfg.d_inner, cfg.d_model, dtype=dtype,
+                                lora_rank=lora_rank),
+        "conv_x": (jax.random.normal(ks[5], (cfg.conv_kernel, cfg.d_inner),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_x_b": jnp.zeros((cfg.d_inner,), dtype),
+        "conv_bc": (jax.random.normal(ks[5], (cfg.conv_kernel, cfg.d_bc),
+                                      jnp.float32) * 0.1).astype(dtype),
+        "conv_bc_b": jnp.zeros((cfg.d_bc,), dtype),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "d": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(cfg.d_inner, dtype),
+    }
+
+
+def _causal_conv(u: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over time + SiLU. u (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :].astype(jnp.float32) *
+              w[i][None, None, :].astype(jnp.float32) for i in range(K))
+    return jax.nn.silu(out + b[None, None, :].astype(jnp.float32)).astype(u.dtype)
+
+
+def _segsum(a: Array) -> Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} a[..., k] (i>=j)."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                chunk: int, init_state: Array | None = None):
+    """SSD scan.  x (b,s,h,p); dt (b,s,h) >0; A (h,) <0; B,C (b,s,h,n)
+    (already expanded from groups to heads).  Returns (y (b,s,h,p),
+    final_state (b,h,p,n))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    f32 = jnp.float32
+    xc = (x.astype(f32) * dt[..., None]).reshape(b, nc, chunk, h, p)
+    Bc = B.astype(f32).reshape(b, nc, chunk, h, n)
+    Cc = C.astype(f32).reshape(b, nc, chunk, h, n)
+    dA = (dt * A[None, None, :]).reshape(b, nc, chunk, h)      # (b,nc,cs,h) <0
+    dA = jnp.moveaxis(dA, -1, 2)                                # (b,nc,h,cs)
+    dA_cs = jnp.cumsum(dA, axis=-1)
+
+    # 1. intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(dA))                                 # (b,nc,h,cs,cs)
+    Ydiag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp",
+                       Cc, Bc, Lmat, xc)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)             # (b,nc,h,cs)
+    states = jnp.einsum("bclhn,bchl,bclhp->bchpn", Bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[..., -1])                       # (b,nc,h)
+    s0 = (jnp.zeros((b, h, p, n), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                        # emit prev
+
+    states_t = jnp.moveaxis(states, 1, 0)                        # (nc,b,h,p,n)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)                    # (nc,b,h)
+    final, prev_states = jax.lax.scan(step, s0, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                # (b,nc,h,p,n)
+
+    # 4. state -> output within chunk
+    out_decay = jnp.exp(dA_cs)                                   # (b,nc,h,cs)
+    Yoff = jnp.einsum("bclhn,bchpn,bchl->bclhp", Cc, prev_states, out_decay)
+
+    y = (Ydiag + Yoff).reshape(b, s, h, p)
+    return y, final
+
+
+def _project(p: dict, cfg: SSMConfig, x: Array, qspec: QSpec | None):
+    with scope("z_proj"):
+        z = linear_apply(p["z_proj"], x, qspec)
+    with scope("x_proj"):
+        xs = linear_apply(p["x_proj"], x, qspec)
+    with scope("bc_proj"):
+        bc = linear_apply(p["bc_proj"], x, qspec)
+    with scope("dt_proj"):
+        dt = linear_apply(p["dt_proj"], x, qspec)
+    return z, xs, bc, dt
+
+
+def _split_heads(cfg: SSMConfig, xs: Array, bc: Array, lead):
+    h, n, g = cfg.n_heads, cfg.d_state, cfg.n_groups
+    rep = h // g
+    xh = xs.reshape(*lead, h, cfg.head_dim)
+    Bm = bc[..., :g * n].reshape(*lead, g, n)
+    Cm = bc[..., g * n:].reshape(*lead, g, n)
+    Bm = jnp.repeat(Bm, rep, axis=len(lead))
+    Cm = jnp.repeat(Cm, rep, axis=len(lead))
+    return xh, Bm, Cm
+
+
+def mamba_apply(p: dict, cfg: SSMConfig, x: Array, *,
+                qspec: QSpec | None = None) -> Array:
+    """Full-sequence forward (training / prefill)."""
+    B_, S, D = x.shape
+    z, xs, bc, dt = _project(p, cfg, x, qspec)
+    xs = _causal_conv(xs, p["conv_x"], p["conv_x_b"])
+    bc = _causal_conv(bc, p["conv_bc"], p["conv_bc_b"])
+    xh, Bm, Cm = _split_heads(cfg, xs, bc, (B_, S))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["a_log"])
+    chunk = min(cfg.chunk, S)
+    y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+    y = y + xh.astype(jnp.float32) * p["d"][None, None, :, None]
+    y = y.reshape(B_, S, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    with scope("out_proj"):
+        return linear_apply(p["out_proj"], y, qspec)
+
+
+def mamba_init_cache(cfg: SSMConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "conv_x": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_bc), dtype),
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                           dtype),
+    }
+
+
+def _conv_step(cache: Array, u: Array, w: Array, b: Array):
+    """One causal-conv step. cache (B,K-1,C), u (B,C). Returns (y, new_cache)."""
+    win = jnp.concatenate([cache, u[:, None, :].astype(cache.dtype)], axis=1)
+    y = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32), w.astype(jnp.float32))
+    y = jax.nn.silu(y + b[None, :].astype(jnp.float32))
+    return y, win[:, 1:]
+
+
+def mamba_decode(p: dict, cfg: SSMConfig, x: Array, cache: dict, *,
+                 qspec: QSpec | None = None) -> tuple[Array, dict]:
+    """Single-token recurrent step.  x (B, 1, D)."""
+    B_ = x.shape[0]
+    z, xs, bc, dt = _project(p, cfg, x, qspec)
+    z, xs, bc, dt = z[:, 0], xs[:, 0], bc[:, 0], dt[:, 0]
+    xs, ncx = _conv_step(cache["conv_x"], xs, p["conv_x"], p["conv_x_b"])
+    bc, ncb = _conv_step(cache["conv_bc"], bc, p["conv_bc"], p["conv_bc_b"])
+    xh, Bm, Cm = _split_heads(cfg, xs, bc, (B_,))
+    dt_ = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt_ * A[None, :])                            # (B,h)
+    st = cache["state"]
+    st = (st * decay[:, :, None, None]
+          + jnp.einsum("bh,bhn,bhp->bhpn", dt_, Bm,
+                       xh.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, st)
+    y = y + xh.astype(jnp.float32) * p["d"][None, :, None]
+    y = y.reshape(B_, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], (y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)))
+    with scope("out_proj"):
+        out = linear_apply(p["out_proj"], y[:, None, :], qspec)
+    return out, {"conv_x": ncx, "conv_bc": ncb, "state": st}

@@ -1,0 +1,12 @@
+from repro.optim.adamw import (OptConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, merge_params,
+                               partition_params, trainable_mask)
+from repro.optim.schedules import make_schedule
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     ef_psum_int8)
+
+__all__ = [
+    "OptConfig", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "merge_params", "partition_params", "trainable_mask", "make_schedule",
+    "compress_int8", "decompress_int8", "ef_psum_int8",
+]

@@ -1,0 +1,140 @@
+"""AdamW with trainable-subset masking (LoRA-only fine-tuning).
+
+Frozen leaves (quantized bases, embeddings, norms) are excluded from both
+gradient computation and optimizer state via the EMPTY-placeholder partition:
+``partition_params`` splits the tree into (trainable, frozen) with 0-size
+placeholders keeping pytree structure, so ``jax.grad`` w.r.t. the trainable
+tree does no wasted backward compute and Adam moments exist only for
+trainable leaves — the memory discipline LoRA fine-tuning is for.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+TRAINABLE_SUFFIXES = {
+    "lora": ("lora_a", "lora_b"),
+    "lora+norm": ("lora_a", "lora_b", "scale", "bias"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"          # const | linear | cosine | wsd
+    warmup_frac: float = 0.03
+    total_steps: int = 1000
+    trainable: str = "lora"           # lora | lora+norm | all
+    grad_compress: str = "none"       # none | int8_ef
+    microbatch: int = 1               # gradient-accumulation splits
+
+
+def _is_float(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def trainable_mask(params, mode: str = "lora"):
+    """Pytree of bools: which leaves train."""
+    from repro.utils import tree_paths
+    flat = tree_paths(params)
+    if mode == "all":
+        decision = {p: _is_float(v) for p, v in flat.items()}
+    else:
+        sfx = TRAINABLE_SUFFIXES[mode]
+        decision = {}
+        for p, v in flat.items():
+            leafname = p.rsplit(".", 1)[-1]
+            tagged = any(seg in ("lora_a", "lora_b") for seg in p.split("."))
+            decision[p] = _is_float(v) and (leafname in sfx or
+                                            (tagged and mode.startswith("lora")))
+    from repro.utils import set_path
+    out: dict = {}
+    for p, d in decision.items():
+        set_path(out, p, d)
+    return out
+
+
+_EMPTY = None  # placeholder via 0-size arrays
+
+
+def _empty_like(x):
+    # always float so jax.grad accepts the trainable tree (placeholders are
+    # 0-size; merge_params selects by size, not dtype)
+    return jnp.zeros((0,), jnp.float32)
+
+
+def partition_params(params, mask):
+    """(trainable, frozen) trees, same structure, 0-size placeholders."""
+    train = jax.tree.map(lambda p, m: p if m else _empty_like(p), params, mask)
+    frozen = jax.tree.map(lambda p, m: _empty_like(p) if m else p, params, mask)
+    return train, frozen
+
+
+def merge_params(train, frozen):
+    return jax.tree.map(lambda t, f: t if t.size else f, train, frozen)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw_init(train_params):
+    """Moments in f32 regardless of param dtype (master-precision states)."""
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(f32, train_params),
+            "nu": jax.tree.map(f32, train_params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, opt_state, train_params, cfg: OptConfig,
+                 schedule: Callable | None = None):
+    """One AdamW step on the trainable tree. Returns (new_params, new_state,
+    metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule(step) if schedule is not None else cfg.lr
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        if p.size == 0:
+            return p, mu, nu
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * jnp.square(g32)
+        mhat = mu / bc1
+        vhat = nu / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (delta + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(train_params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        a, b, c = upd(p, g, mu, nu)
+        new_p.append(a); new_mu.append(b); new_nu.append(c)
+    new_params = jax.tree.unflatten(treedef, new_p)
+    new_state = {"mu": jax.tree.unflatten(treedef, new_mu),
+                 "nu": jax.tree.unflatten(treedef, new_nu),
+                 "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

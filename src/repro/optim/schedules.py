@@ -1,0 +1,34 @@
+"""LR schedules: constant / linear / cosine / WSD (warmup-stable-decay,
+MiniCPM, arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, base_lr: float, total_steps: int,
+                  warmup_frac: float = 0.03, min_ratio: float = 0.1,
+                  decay_frac: float = 0.1):
+    """Returns step -> lr (jnp scalar-safe)."""
+    warmup = max(int(total_steps * warmup_frac), 1)
+
+    def sched(step):
+        s = jnp.asarray(step, jnp.float32)
+        wu = jnp.minimum(s / warmup, 1.0)
+        if kind == "const":
+            post = 1.0
+        elif kind == "linear":
+            t = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+            post = 1.0 - (1.0 - min_ratio) * t
+        elif kind == "cosine":
+            t = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+            post = min_ratio + (1.0 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        elif kind == "wsd":
+            decay_start = total_steps * (1.0 - decay_frac)
+            t = jnp.clip((s - decay_start) / max(total_steps - decay_start, 1),
+                         0.0, 1.0)
+            post = 1.0 - (1.0 - min_ratio) * t      # stable, then linear decay
+        else:
+            raise ValueError(f"unknown schedule {kind}")
+        return base_lr * wu * post
+
+    return sched

@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests run on the single real CPU device.  Multi-device tests spawn
+# subprocesses with XLA_FLAGS (see tests/util.py) so the main process never
+# locks a fake device count.

@@ -1,0 +1,114 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizer import pack_codes, quantize_int
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("shape", [(8, 128, 128, 64), (128, 256, 256, 64),
+                                   (16, 512, 128, 128), (8, 128, 384, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dequant_matmul(bits, shape, dtype):
+    M, K, N, g = shape
+    W = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    codes, s, z = quantize_int(W, bits, g)
+    packed = pack_codes(codes, bits)
+    x = jnp.asarray(RNG.normal(size=(M, K)), dtype)
+    y = ops.dequant_matmul(x, packed, s, z, bits=bits, group_size=g)
+    y_ref = ref.dequant_matmul_ref(x, packed, s, z, bits=bits, group_size=g)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("rank", [8, 64])
+def test_dequant_matmul_lora_fused(bits, rank):
+    M, K, N, g = 16, 256, 128, 64
+    W = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    codes, s, z = quantize_int(W, bits, g)
+    packed = pack_codes(codes, bits)
+    x = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+    A = jnp.asarray(RNG.normal(size=(K, rank)), jnp.float32) * 0.1
+    B = jnp.asarray(RNG.normal(size=(N, rank)), jnp.float32) * 0.1
+    y = ops.dequant_matmul(x, packed, s, z, bits=bits, group_size=g,
+                           lora_a=A, lora_b=B)
+    y_ref = ref.dequant_matmul_lora_ref(x, packed, s, z, A, B, bits=bits,
+                                        group_size=g)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_dequant_matmul_fallback_odd_shapes():
+    """Non-tileable dims route to the reference implementation."""
+    M, K, N, g = 5, 48, 40, 16
+    W = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    codes, s, z = quantize_int(W, 4, g)
+    packed = pack_codes(codes, 4)
+    x = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+    y = ops.dequant_matmul(x, packed, s, z, bits=4, group_size=g)
+    y_ref = ref.dequant_matmul_ref(x, packed, s, z, bits=4, group_size=g)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(512, 128), (1024, 256), (256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram(shape, dtype):
+    T, D = shape
+    x = jnp.asarray(RNG.normal(size=(T, D)), dtype)
+    h = ops.gram(x)
+    h_ref = ref.gram_ref(x)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=2e-1 if dtype == jnp.bfloat16 else 1e-2)
+
+
+@pytest.mark.parametrize("cfg", [(1, 4, 2, 128, 64), (2, 4, 4, 256, 32),
+                                 (1, 8, 2, 384, 16), (1, 2, 1, 128, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(cfg, causal):
+    B, Hq, Hkv, S, d = cfg
+    q = jnp.asarray(RNG.normal(size=(B, Hq, S, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, d)), jnp.float32)
+    o = ops.flash_attention(q, k, v, causal=causal)
+    o_ref = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_flash_attention_bf16():
+    B, Hq, Hkv, S, d = 1, 4, 2, 128, 64
+    q = jnp.asarray(RNG.normal(size=(B, Hq, S, d)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, d)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, d)), jnp.bfloat16)
+    o = ops.flash_attention(q, k, v)
+    o_ref = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), rtol=5e-2,
+                               atol=5e-2)
+
+
+def test_qlinear_kernel_path_matches_model():
+    """linear_apply(use_kernel=True) == reference dequant path."""
+    from repro.models.modules import QSpec, linear_apply
+    K, N, g = 128, 128, 64
+    W = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    codes, s, z = quantize_int(W, 4, g)
+    p = {"qcodes": pack_codes(codes, 4), "scales": s, "zeros": z,
+         "lora_a": jnp.asarray(RNG.normal(size=(K, 8)), jnp.float32) * 0.1,
+         "lora_b": jnp.asarray(RNG.normal(size=(N, 8)), jnp.float32) * 0.1}
+    x = jnp.asarray(RNG.normal(size=(2, 8, K)), jnp.float32)
+    y_ref = linear_apply(p, x, QSpec(bits=4, group_size=g, use_kernel=False))
+    y_ker = linear_apply(p, x, QSpec(bits=4, group_size=g, use_kernel=True))
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)

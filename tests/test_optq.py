@@ -1,0 +1,80 @@
+"""OPTQ sweep correctness properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.optq import (dampen, gram_error, inv_cholesky_upper,
+                             optq_error, optq_quantize)
+from repro.core.quantizer import QuantConfig, dequantize_int, rtn
+
+
+def _case(seed, m=64, n=48, t=512):
+    rng = np.random.default_rng(seed)
+    W = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    X = jnp.asarray(rng.normal(size=(t, m)), jnp.float32)
+    return W, X, X.T @ X
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 3, 4]),
+       st.sampled_from([16, 32, None]))
+def test_optq_beats_rtn_in_calibrated_norm(seed, bits, group):
+    W, X, H = _case(seed)
+    cfg = QuantConfig(bits=bits, group_size=group)
+    Qd, Qc, s, z = optq_quantize(W, H, cfg)
+    e_optq = optq_error(X, W, Qd)
+    e_rtn = optq_error(X, W, rtn(W, cfg))
+    assert e_optq <= e_rtn * (1 + 1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_optq_codes_consistent_with_dequant(seed):
+    W, X, H = _case(seed)
+    cfg = QuantConfig(bits=4, group_size=16)
+    Qd, Qc, s, z = optq_quantize(W, H, cfg)
+    np.testing.assert_allclose(np.asarray(dequantize_int(Qc, s, z, 16)),
+                               np.asarray(Qd), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_inv_cholesky_upper_identity(seed):
+    _, _, H = _case(seed)
+    Hd = dampen(H, 0.01)
+    U = inv_cholesky_upper(Hd)
+    assert bool(jnp.allclose(U, jnp.triu(U), atol=1e-5))
+    Hinv = jnp.linalg.inv(Hd)
+    np.testing.assert_allclose(np.asarray(U.T @ U), np.asarray(Hinv),
+                               atol=1e-4 * float(jnp.abs(Hinv).max()))
+
+
+def test_gram_error_matches_explicit():
+    W, X, H = _case(0)
+    D = W * 0.1
+    np.testing.assert_allclose(gram_error(H, D),
+                               float(jnp.linalg.norm(X @ D)), rtol=1e-4)
+
+
+def test_act_order_no_worse_on_skewed_hessian():
+    """act_order reorders by diag(H); with a strongly skewed H it should not
+    hurt (usually helps)."""
+    rng = np.random.default_rng(7)
+    m, n = 64, 32
+    W = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    scalers = jnp.asarray(np.geomspace(0.05, 20.0, m), jnp.float32)
+    X = jnp.asarray(rng.normal(size=(512, m)), jnp.float32) * scalers[None, :]
+    H = X.T @ X
+    base = optq_error(X, W, optq_quantize(W, H, QuantConfig(bits=2, group_size=16))[0])
+    ao = optq_error(X, W, optq_quantize(
+        W, H, QuantConfig(bits=2, group_size=16, act_order=True))[0])
+    assert ao <= base * 1.10     # no catastrophic regression
+
+
+def test_blocked_equals_unblocked():
+    W, X, H = _case(11)
+    cfg_small = QuantConfig(bits=3, group_size=16, block_size=16)
+    cfg_full = QuantConfig(bits=3, group_size=16, block_size=64)
+    Q1 = optq_quantize(W, H, cfg_small)[0]
+    Q2 = optq_quantize(W, H, cfg_full)[0]
+    np.testing.assert_allclose(np.asarray(Q1), np.asarray(Q2), atol=2e-4)

@@ -1,0 +1,73 @@
+"""§Perf levers preserve semantics: chunked loss == full loss, chunked
+attention == full attention, tp_out remat == full remat (forward values and
+gradients)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import dataclasses
+
+from repro.models.transformer import ModelConfig, init_params, loss_fn
+from repro.models.parallel import LOCAL
+
+RNG = np.random.default_rng(0)
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=32, vocab=64,
+                n_heads=4, n_kv_heads=2, d_ff=64, dtype=jnp.float32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _loss_and_grad(cfg, p, batch):
+    def f(p):
+        return loss_fn(p, cfg, batch)[0]
+    return jax.value_and_grad(f)(p)
+
+
+def test_loss_chunk_equivalent():
+    cfg = _cfg()
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(RNG.integers(0, 64, (2, 16)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    l0, g0 = _loss_and_grad(cfg, p, batch)
+    l1, g1 = _loss_and_grad(dataclasses.replace(cfg, loss_chunk=4), p, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_attn_chunk_equivalent():
+    cfg = _cfg()
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(RNG.integers(0, 64, (2, 16)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    l0, g0 = _loss_and_grad(cfg, p, batch)
+    l1, g1 = _loss_and_grad(dataclasses.replace(cfg, attn_chunk=4), p, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_tp_out_remat_equivalent():
+    cfg = _cfg()
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(RNG.integers(0, 64, (2, 16)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    l0, g0 = _loss_and_grad(cfg, p, batch)
+    l1, g1 = _loss_and_grad(dataclasses.replace(cfg, remat="tp_out"), p, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_all_levers_together():
+    cfg = _cfg(n_layers=3)
+    p = init_params(jax.random.PRNGKey(1), cfg)
+    toks = jnp.asarray(RNG.integers(0, 64, (2, 16)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    l0, _ = _loss_and_grad(cfg, p, batch)
+    cfg2 = dataclasses.replace(cfg, loss_chunk=4, attn_chunk=4,
+                               remat="tp_out")
+    l1, _ = _loss_and_grad(cfg2, p, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)

@@ -1,0 +1,139 @@
+"""End-to-end system behaviour: the paper's workflow (pretrain -> calibrated
+quantize -> LoRA fine-tune) and the CLI drivers."""
+import subprocess
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cloq import discrepancy_norms, regularize_gram
+from repro.core.pipeline import (quantize_model, quantized_param_shapes,
+                                 quantizable_linear_paths, to_eager_params)
+from repro.data import DataConfig, TokenStream
+from repro.launch.steps import build_state, make_train_step
+from repro.models.modules import QSpec
+from repro.models.parallel import LOCAL
+from repro.models.transformer import ModelConfig, init_params
+from repro.optim import OptConfig, merge_params
+from repro.utils import tree_paths
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _pretrained(cfg, steps=50, lr=3e-3):
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ds = TokenStream(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8,
+                                seed=1))
+    ocfg = OptConfig(lr=lr, trainable="all", total_steps=steps)
+    st = build_state(params, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg, LOCAL))
+    for _ in range(steps):
+        st, m = step(st, ds.next_batch())
+    return merge_params(st["train"], st["frozen"]), ds, float(m["loss"])
+
+
+def test_paper_workflow_discrepancy_ordering():
+    """On a *trained* model, per-layer discrepancy ||X(Q+AB^T-W)|| must order
+    CLoQ < LoftQ (the paper's Fig. 2, model-level)."""
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=48,
+                      vocab=128, n_heads=4, n_kv_heads=2, d_ff=96,
+                      dtype=jnp.float32)
+    trained, ds, _ = _pretrained(cfg)
+    calib = [ds.next_batch() for _ in range(2)]
+    qspec = QSpec(bits=2, group_size=16, rank=16)
+
+    from repro.core.pipeline import run_calibration
+    from repro.core.quantizer import dequantize_int, unpack_codes
+    eparams = to_eager_params(trained, cfg)
+    store = run_calibration(eparams, cfg, calib)
+
+    results = {}
+    for method in ("cloq", "loftq"):
+        qp, qcfg, _ = quantize_model(trained, cfg, calib, method=method,
+                                     qspec=qspec)
+        qe = to_eager_params(qp, qcfg)
+        total = 0.0
+        for lin in quantizable_linear_paths(eparams):
+            from repro.utils import get_path
+            W = np.asarray(get_path(eparams, lin)["w"], np.float32)
+            sub = get_path(qe, lin)
+            codes = unpack_codes(sub["qcodes"], qspec.bits, W.shape[0])
+            Qd = dequantize_int(codes, sub["scales"], sub["zeros"],
+                                qspec.group_size)
+            H = regularize_gram(jnp.asarray(store.gram(lin)))
+            fro, _ = discrepancy_norms(H, Qd, sub["lora_a"].astype(jnp.float32),
+                                       sub["lora_b"].astype(jnp.float32),
+                                       jnp.asarray(W))
+            total += fro
+        results[method] = total
+    assert results["cloq"] < results["loftq"], results
+
+
+def test_quantized_finetune_recovers():
+    """2-bit CLoQ + LoRA fine-tuning approaches the fp loss (paper's thesis)."""
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=48,
+                      vocab=128, n_heads=4, n_kv_heads=2, d_ff=96,
+                      dtype=jnp.float32)
+    trained, ds, fp_loss = _pretrained(cfg, steps=60)
+    calib = [ds.next_batch() for _ in range(2)]
+    qp, qcfg, _ = quantize_model(trained, cfg, calib, method="cloq",
+                                 qspec=QSpec(bits=2, group_size=16, rank=16))
+    ocfg = OptConfig(lr=1e-3, trainable="lora", total_steps=40)
+    st = build_state(qp, ocfg)
+    step = jax.jit(make_train_step(qcfg, ocfg, LOCAL))
+    first = None
+    for _ in range(40):
+        st, m = step(st, ds.next_batch())
+        first = first if first is not None else float(m["loss"])
+    final = float(m["loss"])
+    assert final < first, (first, final)
+    assert final < fp_loss + 0.5, (final, fp_loss)
+
+
+def test_quantized_param_shapes_match_real_quantization():
+    """Abstract dry-run shapes == actually-quantized param shapes."""
+    cfg = ModelConfig(name="t", family="moe", n_layers=2, d_model=32,
+                      vocab=128, n_heads=4, n_kv_heads=2, n_experts=4,
+                      top_k=2, d_ff_expert=32, dtype=jnp.float32,
+                      quant=QSpec(bits=4, group_size=16, rank=8))
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    ds = TokenStream(DataConfig(vocab=128, seq_len=32, global_batch=2))
+    qp, qcfg, _ = quantize_model(p, cfg, [ds.next_batch()], method="cloq",
+                                 qspec=cfg.quant)
+    abstract = quantized_param_shapes(cfg)
+    flat_real = tree_paths(qp)
+    flat_abs = tree_paths(abstract)
+    assert set(flat_real) == set(flat_abs), (
+        set(flat_real) ^ set(flat_abs))
+    for k in flat_real:
+        assert tuple(flat_real[k].shape) == tuple(flat_abs[k].shape), \
+            (k, flat_real[k].shape, flat_abs[k].shape)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-370m"])
+def test_train_cli_smoke(arch, tmp_path):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", arch,
+         "--smoke", "--method", "cloq", "--bits", "4", "--group-size", "16",
+         "--rank", "8", "--steps", "6", "--seq-len", "32", "--batch", "2",
+         "--calib-batches", "1", "--ckpt-dir", str(tmp_path / "ck"),
+         "--ckpt-every", "3"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "[done]" in out.stdout
+    assert any(p.startswith("step_") for p in os.listdir(tmp_path / "ck"))
+
+
+def test_serve_cli_smoke():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-1.7b",
+         "--smoke", "--method", "rtn", "--bits", "4", "--batch", "2",
+         "--cache-len", "32", "--requests", "4", "--max-new", "4"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "[serve]" in out.stdout

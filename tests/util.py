@@ -1,0 +1,25 @@
+"""Helpers for multi-device subprocess tests."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 300):
+    """Run ``code`` in a subprocess with ``n_devices`` fake CPU devices.
+    Returns CompletedProcess; asserts on failure with captured output."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={n_devices}").strip()
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+    assert proc.returncode == 0, (
+        f"subprocess failed\n--- stdout ---\n{proc.stdout}\n"
+        f"--- stderr ---\n{proc.stderr}")
+    return proc
