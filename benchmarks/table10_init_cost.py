@@ -1,6 +1,16 @@
 """Table 10 analog: initialization wall-time, LoftQ vs CLoQ (vs distributed
 CLoQ path), at realistic layer dims.  No backprop in either — the paper's
-cost claim is SVD-count, which we measure directly."""
+cost claim is SVD-count, which we measure directly.
+
+Extended with the batched quantization engine (``repro.core.batched``): for
+a bucket of N same-shape layers — the MoE-expert / attention-projection
+regime where shape-bucketing actually fires — the per-layer sequential
+engine (a Python loop of ``pipeline._quantize_one`` over the MagR→OPTQ→CLoQ
+stack) is timed against one ``jit(vmap)`` dispatch over the stacked bucket
+(``batched_s``).  Wall-times are best-of-``REPS`` to tame shared-machine
+noise; the ``speedup`` column is what ``quantize_model`` gains on models
+whose linears bucket well.  Large single layers amortize poorly on a
+serial-BLAS host — those go to the sharded path instead (DESIGN.md §3)."""
 from __future__ import annotations
 
 import json
@@ -12,11 +22,63 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import RESULTS, FAST
+from repro.core.batched import LayerTask, quantize_layer_batch
 from repro.core.cloq import cloq_init, regularize_gram
 from repro.core.loftq import loftq_init
 from repro.core.magr import magr_preprocess
 from repro.core.optq import optq_quantize
+from repro.core.pipeline import _quantize_one
 from repro.core.quantizer import QuantConfig
+from repro.models.modules import QSpec
+
+REPS = 3               # best-of reps for the engine comparison
+
+# (m, n, layers-per-bucket): the many-same-shape-layers regime
+BUCKETS = [(64, 64, 16), (128, 128, 16)] if FAST else \
+    [(64, 64, 16), (128, 128, 16), (256, 256, 8)]
+
+
+def _cloq_stack(W, H, qcfg, rank):
+    Wp = magr_preprocess(W, H, alpha=0.001 * jnp.trace(H) / W.shape[0])
+    Qd, _, _, _ = optq_quantize(Wp, H, qcfg)
+    return cloq_init(regularize_gram(H), W - Qd, rank)
+
+
+def _best_of(f, reps=REPS) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        f()
+        ts.append(time.time() - t0)
+    return min(ts)
+
+
+def _bucket_row(m: int, n: int, n_layers: int, qspec: QSpec, rng) -> dict:
+    Ws = [jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+          for _ in range(n_layers)]
+    Hs = []
+    for _ in range(n_layers):
+        X = rng.normal(size=(1024, m)).astype(np.float32)
+        Hs.append(jnp.asarray(X.T @ X))
+    keys = jax.random.split(jax.random.PRNGKey(0), n_layers)
+    tasks = [LayerTask(f"l{i}", None, Wi, Hi, ki)
+             for i, (Wi, Hi, ki) in enumerate(zip(Ws, Hs, keys))]
+
+    def seq():
+        for t in tasks:
+            out = _quantize_one(t.W, t.H, qspec, "cloq", t.key)
+        jax.block_until_ready(out["lora_a"])
+
+    def bat():
+        outs = quantize_layer_batch(tasks, qspec, "cloq")
+        jax.block_until_ready(outs[-1]["lora_a"])
+
+    seq()
+    bat()          # compile both executables before timing
+    t_seq, t_bat = _best_of(seq), _best_of(bat)
+    return {"m": m, "n": n, "n_layers": n_layers,
+            "sequential_s": round(t_seq, 3), "batched_s": round(t_bat, 3),
+            "speedup": round(t_seq / t_bat, 2)}
 
 
 def run() -> dict:
@@ -36,19 +98,32 @@ def run() -> dict:
         t_loftq = time.time() - t0
 
         t0 = time.time()
-        Wp = magr_preprocess(W, H, alpha=0.001 * float(jnp.trace(H) / m))
-        Qd, _, _, _ = optq_quantize(Wp, H, qcfg)
-        A, B = cloq_init(regularize_gram(H), W - Qd, 64)
+        A, B = _cloq_stack(W, H, qcfg, 64)
         jax.block_until_ready(A)
         t_cloq = time.time() - t0
 
         rows.append({"m": m, "n": n, "loftq_s": round(t_loftq, 3),
                      "cloq_s": round(t_cloq, 3),
                      "ratio": round(t_cloq / t_loftq, 2)})
-        print(f"  {m}x{n}: loftq={t_loftq:.2f}s cloq={t_cloq:.2f}s", flush=True)
+        print(f"  {m}x{n}: loftq={t_loftq:.2f}s cloq={t_cloq:.2f}s",
+              flush=True)
+
+    qspec = QSpec(bits=2, group_size=64, rank=16)
+    batched_rows = []
+    for (m, n, n_layers) in BUCKETS:
+        row = _bucket_row(m, n, n_layers, qspec, rng)
+        batched_rows.append(row)
+        print(f"  bucket {m}x{n} x{n_layers}: seq={row['sequential_s']}s "
+              f"batched={row['batched_s']}s ({row['speedup']}x)", flush=True)
+
     out = {"rows": rows,
+           "batched_rows": batched_rows,
+           "batched_speedup_best": max(r["speedup"] for r in batched_rows),
            "note": ("paper Table 10: comparable runtimes; CLoQ trades "
-                    "LoftQ's 5 SVD iterations for OPTQ+2 SVDs")}
+                    "LoftQ's 5 SVD iterations for OPTQ+2 SVDs.  batched_s: "
+                    "one jit(vmap) dispatch over a bucket of same-shape "
+                    "layers vs the sequential per-layer engine loop "
+                    f"(best of {REPS})")}
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "table10_init_cost.json"), "w") as f:
         json.dump(out, f, indent=1)

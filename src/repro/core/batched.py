@@ -1,0 +1,197 @@
+"""Batched layer-wise quantization engine: vmap across shape-bucketed layers.
+
+The per-layer MagR→OPTQ→CLoQ stack (and the LoftQ/QLoRA/RTN baselines) is a
+closed-form pipeline of traced JAX ops — nothing about it is inherently
+sequential across *layers*.  Running it layer-by-layer from Python pays one
+dispatch chain, one ``eigh``+``svd``, and one host sync per linear, so model
+quantization wall-time scales with layer count instead of with hardware.
+
+This module batches it:
+
+1.  **Planner** (:func:`plan_buckets`): every quantization site — a 2-D
+    linear, or one expert slice of a stacked ``(E, m, n)`` MoE weight — is a
+    :class:`LayerTask`.  Tasks are grouped into buckets keyed by
+    :class:`BucketSpec`: ``(m, n, method, bits, group_size, rank, split,
+    block_size, …)``.  Everything shape- or branch-like (OPTQ's sweep block
+    via :func:`repro.core.optq.pick_block`, the MagR gate ``bits <= 4``) is
+    resolved *here*, at plan time, so the traced core has no data-dependent
+    Python branching.
+
+2.  **Executor** (:func:`run_bucket` / :func:`quantize_layer_batch`): each
+    bucket stacks its ``(W, H)`` pairs to ``(L, m, n)`` / ``(L, m, m)`` and
+    runs a single ``jax.jit(jax.vmap(...))`` executable over the whole
+    method stack — one trace, one dispatch, all layers of the bucket
+    factorized in parallel.  Per-task PRNG keys are threaded through so
+    random LoRA inits match the sequential path bit-for-bit.
+
+The sequential per-layer path in :mod:`repro.core.pipeline` remains as the
+fallback and as the numerical-parity oracle (``tests/test_batched.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cloq import cloq_init, regularize_gram
+from repro.core.loftq import loftq_init, qlora_init
+from repro.core.magr import magr_preprocess
+from repro.core.optq import optq_quantize_core, pick_block
+from repro.core.quantizer import QuantConfig, pack_codes, quantize_int
+
+Array = jax.Array
+
+# methods whose base quantization consumes a calibration Gram
+GRAM_METHODS = ("cloq", "gptq")
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """Static signature of one vmapped executable.  Hashable: used both as
+    the bucket key and as the jit static argument."""
+    m: int
+    n: int
+    method: str
+    bits: int
+    group_size: int | None
+    rank: int
+    split: str
+    block_size: int          # OPTQ sweep block, already a divisor of m
+    act_order: bool
+    lambda_frac: float
+    magr: bool               # MagR gate (bits <= 4), resolved at plan time
+    magr_iters: int
+    has_gram: bool
+
+
+@dataclasses.dataclass
+class LayerTask:
+    """One quantization site: a 2-D weight (possibly one expert slice of a
+    stacked MoE weight) plus its Gram and PRNG key."""
+    path: str                # lin path in the param tree
+    expert: int | None       # index into the stacked (E, m, n) weight
+    W: Array                 # (m, n)
+    H: Array | np.ndarray | None   # (m, m) calibration Gram
+    key: Array               # per-task PRNG key
+
+
+def make_spec(m: int, n: int, qspec, method: str, has_gram: bool,
+              base: QuantConfig | None = None) -> BucketSpec:
+    """Resolve all static/branching decisions for one (shape, method)."""
+    base = base or QuantConfig(bits=qspec.bits, group_size=qspec.group_size)
+    return BucketSpec(
+        m=m, n=n, method=method, bits=qspec.bits,
+        group_size=qspec.group_size, rank=qspec.rank, split=qspec.split,
+        block_size=pick_block(m, base.block_size),
+        act_order=base.act_order, lambda_frac=base.lambda_frac,
+        magr=(method == "cloq" and qspec.bits <= 4),
+        magr_iters=base.magr_iters,
+        has_gram=has_gram and method in GRAM_METHODS)
+
+
+def quantize_single(W: Array, H: Array | None, key: Array,
+                    spec: BucketSpec) -> dict:
+    """Traced single-layer core (host-sync free).  Mirrors the sequential
+    ``pipeline._quantize_one`` but with every static decision pre-resolved
+    in ``spec`` — safe under ``jax.vmap``."""
+    qcfg = QuantConfig(bits=spec.bits, group_size=spec.group_size,
+                       block_size=spec.block_size, act_order=spec.act_order,
+                       lambda_frac=spec.lambda_frac)
+    m, n = spec.m, spec.n
+    W = jnp.asarray(W, jnp.float32)
+    if spec.method == "cloq":
+        H = jnp.asarray(H, jnp.float32)
+        if spec.magr:
+            alpha = 0.001 * jnp.trace(H) / m       # traced, no host sync
+            Wp = magr_preprocess(W, H, alpha=alpha, iters=spec.magr_iters)
+        else:
+            Wp = W
+        Qd, Qc, s, z = optq_quantize_core(Wp, H, qcfg)
+        A, B = cloq_init(regularize_gram(H), W - Qd, spec.rank, spec.split)
+        return {"qcodes": pack_codes(Qc, spec.bits), "scales": s, "zeros": z,
+                "lora_a": A, "lora_b": B}
+    if spec.method == "gptq":
+        Qd, Qc, s, z = optq_quantize_core(W, jnp.asarray(H, jnp.float32),
+                                          qcfg)
+        A = jax.random.normal(key, (m, spec.rank), jnp.float32) / np.sqrt(m)
+        B = jnp.zeros((n, spec.rank), jnp.float32)
+        return {"qcodes": pack_codes(Qc, spec.bits), "scales": s, "zeros": z,
+                "lora_a": A, "lora_b": B}
+    if spec.method == "loftq":
+        Qd, A, B, qstate = loftq_init(W, qcfg, spec.rank, iters=5)
+        codes, s, z = qstate
+        return {"qcodes": pack_codes(codes, spec.bits), "scales": s,
+                "zeros": z, "lora_a": A, "lora_b": B}
+    if spec.method == "qlora":
+        Qd, A, B, qstate = qlora_init(W, qcfg, spec.rank, key)
+        codes, absmax = qstate
+        return {"qcodes": pack_codes(codes, 4), "absmax": absmax,
+                "lora_a": A, "lora_b": B}
+    if spec.method == "rtn":
+        codes, s, z = quantize_int(W, spec.bits, spec.group_size)
+        A = jax.random.normal(key, (m, spec.rank), jnp.float32) / np.sqrt(m)
+        B = jnp.zeros((n, spec.rank), jnp.float32)
+        return {"qcodes": pack_codes(codes, spec.bits), "scales": s,
+                "zeros": z, "lora_a": A, "lora_b": B}
+    raise ValueError(f"unknown method {spec.method}")
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def run_bucket(Ws: Array, Hs: Array | None, keys: Array,
+               spec: BucketSpec) -> dict:
+    """One compiled executable per bucket signature: vmap of
+    :func:`quantize_single` over stacked layers.
+
+    ``Ws`` is ``(L, m, n)``, ``Hs`` is ``(L, m, m)`` or ``None`` (methods
+    that don't consume a Gram), ``keys`` is ``(L, 2)``.  Returns a dict of
+    stacked leaves (leading dim ``L``)."""
+    if Hs is None:
+        return jax.vmap(
+            lambda W, k: quantize_single(W, None, k, spec))(Ws, keys)
+    return jax.vmap(
+        lambda W, H, k: quantize_single(W, H, k, spec))(Ws, Hs, keys)
+
+
+def plan_buckets(tasks: list[LayerTask], qspec, method: str,
+                 base: QuantConfig | None = None
+                 ) -> dict[BucketSpec, list[int]]:
+    """Group task indices by executable signature (insertion-ordered)."""
+    buckets: dict[BucketSpec, list[int]] = {}
+    for i, t in enumerate(tasks):
+        m, n = t.W.shape
+        has_gram = t.H is not None
+        if method in GRAM_METHODS and not has_gram:
+            raise ValueError(
+                f"method {method!r} needs a calibration Gram for {t.path}"
+                f"{'' if t.expert is None else f'[expert {t.expert}]'}")
+        spec = make_spec(m, n, qspec, method, has_gram, base)
+        buckets.setdefault(spec, []).append(i)
+    return buckets
+
+
+def quantize_layer_batch(tasks: list[LayerTask], qspec, method: str,
+                         base: QuantConfig | None = None,
+                         progress: Callable[[str], None] | None = None
+                         ) -> list[dict]:
+    """Quantize all ``tasks`` bucket-by-bucket.  Returns one leaf dict per
+    task, in task order (same leaves as the sequential path)."""
+    buckets = plan_buckets(tasks, qspec, method, base)
+    results: list[dict | None] = [None] * len(tasks)
+    for b, (spec, idxs) in enumerate(buckets.items()):
+        if progress:
+            progress(f"[bucket {b}] {spec.m}x{spec.n} "
+                     f"{spec.method} x{len(idxs)} layers")
+        Ws = jnp.stack([jnp.asarray(tasks[i].W, jnp.float32) for i in idxs])
+        Hs = None
+        if spec.has_gram:
+            Hs = jnp.stack([jnp.asarray(tasks[i].H, jnp.float32)
+                            for i in idxs])
+        keys = jnp.stack([tasks[i].key for i in idxs])
+        out = run_bucket(Ws, Hs, keys, spec)
+        for j, i in enumerate(idxs):
+            results[i] = {k: v[j] for k, v in out.items()}
+    return results

@@ -69,7 +69,9 @@ def cloq_init(H: Array, dW: Array, rank: int, split: str = "paper"):
     """Closed-form (A, B) minimizing ||X (A B^T - dW)||_F^2.
 
     ``H`` must already be regularized (Algorithm 1 input).  Returns
-    (A (m,r), B (n,r))."""
+    (A (m,r), B (n,r)).  Vmap-safe: only ``rank``/``split`` are static, so
+    the batched engine maps it over stacked (H, dW) buckets (and the
+    shared-block driver over per-site Grams with a fixed dW)."""
     dW = jnp.asarray(dW, jnp.float32)
     R, Rinv = gram_root(H)
     M = R @ dW

@@ -26,7 +26,10 @@ def _rtn_roundtrip(W: Array, cfg: QuantConfig):
 
 
 def loftq_init(W: Array, cfg: QuantConfig, rank: int, iters: int = 5):
-    """Returns (Q_dequant, A, B, qstate) after ``iters`` AltMin rounds."""
+    """Returns (Q_dequant, A, B, qstate) after ``iters`` AltMin rounds.
+
+    Vmap-safe: the AltMin loop is a static Python unroll of traced ops, so
+    the batched engine maps it across a stacked ``(L, m, n)`` bucket."""
     W = jnp.asarray(W, jnp.float32)
     m, n = W.shape
     A = jnp.zeros((m, rank), jnp.float32)

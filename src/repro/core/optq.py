@@ -17,12 +17,13 @@ sweep JAX-friendly and deterministic under ``act_order``.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantizer import QuantConfig, quant_params
+from repro.core.quantizer import QuantConfig, quant_params, stable_round
 
 Array = jax.Array
 
@@ -75,7 +76,7 @@ def _optq_core(W: Array, H: Array, srow: Array, zrow: Array, *, bits: int,
         def inner(i, st):
             Wb, Qdb, Qcb, Err = st
             w_i, s_i, z_i = Wb[i], sblk[i], zblk[i]
-            q = jnp.clip(jnp.round(w_i / s_i) + z_i, 0.0, maxq)
+            q = jnp.clip(stable_round(w_i / s_i) + z_i, 0.0, maxq)
             dq = (q - z_i) * s_i
             err = (w_i - dq) / dblk[i]
             u = Ubb[i] * (jnp.arange(bs) > i)          # rows after i in block
@@ -109,13 +110,34 @@ def _per_row_grids(scales: Array, zeros: Array, m: int, group_size: int | None):
     return jnp.repeat(scales, g, axis=0), jnp.repeat(zeros, g, axis=0)
 
 
-def _pick_block(m: int, block_size: int) -> int:
+def pick_block(m: int, block_size: int) -> int:
+    """Largest divisor of ``m`` that is <= ``block_size`` (sweep block).
+
+    Shape-only: resolve at *plan* time so the traced core below stays free
+    of data-dependent Python branching (vmap/batching safe)."""
     if m % block_size == 0:
         return block_size
     for b in range(min(block_size, m), 0, -1):
         if m % b == 0:
             return b
     return m
+
+
+def optq_quantize_core(W: Array, H: Array, cfg: QuantConfig,
+                       scales: Array | None = None,
+                       zeros: Array | None = None):
+    """Vmap-safe OPTQ sweep: pure traced ops, no host syncs, no shape
+    fallbacks.  ``cfg.block_size`` must already divide ``m`` — resolve it
+    with :func:`pick_block` at plan time.  Returns
+    (Q_dequant (m,n) f32, codes uint8, scales, zeros)."""
+    W = jnp.asarray(W, jnp.float32)
+    H = dampen(jnp.asarray(H, jnp.float32), cfg.lambda_frac)
+    if scales is None or zeros is None:
+        scales, zeros = quant_params(W, cfg.bits, cfg.group_size)
+    srow, zrow = _per_row_grids(scales, zeros, W.shape[0], cfg.group_size)
+    Qd, Qc = _optq_core(W, H, srow, zrow, bits=cfg.bits,
+                        block_size=cfg.block_size, act_order=cfg.act_order)
+    return Qd, Qc, scales, zeros
 
 
 def optq_quantize(W: Array, H: Array, cfg: QuantConfig,
@@ -125,15 +147,10 @@ def optq_quantize(W: Array, H: Array, cfg: QuantConfig,
     ``H`` is the *undamped* Gram; damping is applied here.
     Grids are static per group, computed from ``W`` unless provided.
     """
-    W = jnp.asarray(W, jnp.float32)
-    H = dampen(jnp.asarray(H, jnp.float32), cfg.lambda_frac)
-    if scales is None or zeros is None:
-        scales, zeros = quant_params(W, cfg.bits, cfg.group_size)
-    srow, zrow = _per_row_grids(scales, zeros, W.shape[0], cfg.group_size)
-    bs = _pick_block(W.shape[0], cfg.block_size)
-    Qd, Qc = _optq_core(W, H, srow, zrow, bits=cfg.bits, block_size=bs,
-                        act_order=cfg.act_order)
-    return Qd, Qc, scales, zeros
+    bs = pick_block(W.shape[0], cfg.block_size)
+    if bs != cfg.block_size:
+        cfg = dataclasses.replace(cfg, block_size=bs)
+    return optq_quantize_core(W, H, cfg, scales, zeros)
 
 
 def optq_error(X: Array, W: Array, Qd: Array) -> float:
@@ -160,7 +177,7 @@ def optq_quantize_sharded(W: Array, H: Array, cfg: QuantConfig, mesh,
     Hd = dampen(jnp.asarray(H, jnp.float32), cfg.lambda_frac)
     scales, zeros = quant_params(W, cfg.bits, cfg.group_size)
     srow, zrow = _per_row_grids(scales, zeros, W.shape[0], cfg.group_size)
-    bs = _pick_block(W.shape[0], cfg.block_size)
+    bs = pick_block(W.shape[0], cfg.block_size)
 
     def local(Wl, Hl, sl, zl):
         return _optq_core(Wl, Hl, sl, zl, bits=cfg.bits, block_size=bs,

@@ -6,11 +6,29 @@ with the base quantized by MagR→OPTQ against calibration Grams and the LoRA
 adapters initialized by CLoQ's closed form (or a baseline method).
 
 Calibration runs the model *eagerly* (``scan_layers=False``) so the
-name-scope capture hooks see concrete activations.  MoE experts carry
-per-expert Grams (E, D, D) and are quantized per expert via ``vmap``.  The
-zamba2-style shared block gets ONE quantized base from the pooled Gram and
-per-site LoRA from per-site Grams — CLoQ's data-driven init extended to
-weight-shared architectures (beyond-paper; DESIGN.md §5).
+name-scope capture hooks see concrete activations.  The zamba2-style shared
+block gets ONE quantized base from the pooled Gram and per-site LoRA from
+per-site Grams — CLoQ's data-driven init extended to weight-shared
+architectures (beyond-paper; DESIGN.md §5).
+
+Engines
+-------
+``engine="batched"`` (default) is the **batched quantization engine**
+(:mod:`repro.core.batched`): quantization sites are flattened to per-layer
+tasks — each stacked MoE weight ``(E, m, n)`` contributes E expert tasks, a
+natural bucket — then grouped by ``(m, n, method, bits, group_size, rank,
+split, …)``.  Each bucket stacks its ``(W, H)`` pairs and runs the full
+MagR→OPTQ→CLoQ (or baseline) stack under one ``jax.jit(jax.vmap(...))``
+executable: one trace, one dispatch, all layers of the bucket factorized in
+parallel.  All shape-dependent branching (OPTQ sweep block, MagR gate) is
+resolved at *plan* time so the traced cores stay vmap-safe.  Per-site PRNG
+keys are split in path order, exactly like the sequential loop, so random
+LoRA inits agree bit-for-bit.
+
+``engine="sequential"`` is the original per-layer Python loop, kept as the
+fallback and as the numerical-parity oracle (``tests/test_batched.py``
+asserts both engines produce allclose leaves, including the stacked-MoE
+case).
 
 Methods:
     cloq       MagR -> OPTQ -> closed-form (A, B)          [the paper]
@@ -28,12 +46,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.batched import LayerTask, quantize_layer_batch
 from repro.core.cloq import cloq_init, regularize_gram
 from repro.core.loftq import loftq_init, qlora_init
 from repro.core.magr import magr_preprocess
 from repro.core.optq import optq_quantize
-from repro.core.quantizer import (QuantConfig, pack_codes, quantize_int,
-                                  quantize_nf4)
+from repro.core.quantizer import (QuantConfig, dequantize_int, pack_codes,
+                                  quantize_int, unpack_codes)
 from repro.models.modules import QSpec
 from repro.models.transformer import ModelConfig, forward
 from repro.utils import GramStore, capture_grams, get_path, set_path, tree_paths
@@ -112,6 +131,38 @@ def run_calibration(params: dict, cfg: ModelConfig,
     return store
 
 
+def _scope_for(lin_path: str) -> str:
+    """Map a param path to the calibration capture scope."""
+    if lin_path.startswith("shared.block."):
+        return "shared." + lin_path[len("shared.block."):]
+    if lin_path.startswith("cross."):
+        # param "cross.{i}.xattn.{name}" captured under scope
+        # "dec_blocks.{i}.cross.{name}"
+        _, idx, _, name = lin_path.split(".")
+        return f"dec_blocks.{idx}.cross.{name}"
+    return lin_path
+
+
+def _shared_site_grams(store: GramStore, lin_path: str):
+    """Per-site Grams of a weight-shared linear plus their pooled sum."""
+    rest = lin_path[len("shared.block."):]          # e.g. attn.q
+    site_paths = sorted(k for k in store.grams
+                        if k.startswith("sites.") and
+                        k.endswith(".shared." + rest))
+    pooled = None
+    for sp in site_paths:
+        g = store.grams[sp]
+        pooled = g.copy() if pooled is None else pooled + g
+    return rest, site_paths, pooled
+
+
+def _shared_base_dequant(newlin: dict, m: int, qspec: QSpec) -> Array:
+    """Dequantize the shared base once — it is identical for every site."""
+    codes = unpack_codes(newlin["qcodes"], qspec.bits, m)
+    return dequantize_int(codes, newlin["scales"], newlin["zeros"],
+                          qspec.group_size)
+
+
 def _quantize_one(W: Array, H: Array | None, qspec: QSpec, method: str,
                   key: Array):
     """Quantize one (m, n) weight. Returns dict of new leaves."""
@@ -121,7 +172,9 @@ def _quantize_one(W: Array, H: Array | None, qspec: QSpec, method: str,
     if method == "cloq":
         assert H is not None, "cloq needs calibration Grams"
         H = jnp.asarray(H, jnp.float32)
-        Wp = magr_preprocess(W, H, alpha=0.001 * float(jnp.trace(H) / m),
+        # traced alpha (same arithmetic as the batched core: f32, no host
+        # sync) so both engines quantize identically
+        Wp = magr_preprocess(W, H, alpha=0.001 * jnp.trace(H) / m,
                              iters=20) if qspec.bits <= 4 else W
         Qd, Qc, s, z = optq_quantize(Wp, H, qcfg)
         A, B = cloq_init(regularize_gram(H), W - Qd, qspec.rank, qspec.split)
@@ -163,34 +216,29 @@ def _cast_for_model(leaves: dict, dtype) -> dict:
     return out
 
 
-def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
-                   *, method: str = "cloq", qspec: QSpec | None = None,
-                   seed: int = 0,
-                   progress: Callable[[str], None] | None = None):
-    """Quantize all block linears of ``params``.
+def _set_site_lora(new_params: dict, rest: str, As, Bs, dtype) -> None:
+    sl = dict(get_path(new_params, "shared.site_lora"))
+    sl[rest.replace(".", "_")] = {"lora_a": jnp.asarray(As).astype(dtype),
+                                  "lora_b": jnp.asarray(Bs).astype(dtype)}
+    set_path(new_params, "shared.site_lora", sl)
 
-    Returns (new_params in the input (scan/eager) layout, new_cfg with
-    ``quant=qspec`` set, gram_store)."""
-    qspec = qspec or cfg.quant or QSpec()
-    eparams = to_eager_params(params, cfg)
-    store = run_calibration(eparams, cfg, calib_batches)
-    new_params = jax.tree.map(lambda a: a, eparams)   # structural copy
+
+# ---------------------------------------------------------------------------
+# Sequential engine: the original per-layer loop (fallback + parity oracle).
+# ---------------------------------------------------------------------------
+
+
+def _quantize_model_sequential(eparams: dict, store: GramStore, qspec: QSpec,
+                               method: str, seed: int, cfg: ModelConfig,
+                               new_params: dict,
+                               progress: Callable[[str], None] | None) -> None:
     key = jax.random.PRNGKey(seed)
-
     for i, lin_path in enumerate(quantizable_linear_paths(eparams)):
         key, sub = jax.random.split(key)
         lin = dict(get_path(eparams, lin_path))
         W = lin.pop("w")
         is_shared = lin_path.startswith("shared.block.")
-        if is_shared:
-            scope_path = "shared." + lin_path[len("shared.block."):]
-        elif lin_path.startswith("cross."):
-            # param "cross.{i}.xattn.{q|k|v|o}" captured under scope
-            # "dec_blocks.{i}.cross.{q|k|v|o}"
-            _, i, _, name = lin_path.split(".")
-            scope_path = f"dec_blocks.{i}.cross.{name}"
-        else:
-            scope_path = lin_path
+        scope_path = _scope_for(lin_path)
         if progress:
             progress(f"[{i}] {lin_path} {tuple(W.shape)}")
 
@@ -205,37 +253,25 @@ def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
             newlin = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
         elif is_shared:
             # pooled Gram for the shared base; per-site Grams for site LoRA
-            rest = lin_path[len("shared.block."):]          # e.g. attn.q
-            site_paths = sorted(k for k in store.grams
-                                if k.startswith("sites.") and
-                                k.endswith(".shared." + rest))
-            pooled = None
-            for sp in site_paths:
-                g = store.grams[sp]
-                pooled = g.copy() if pooled is None else pooled + g
+            rest, site_paths, pooled = _shared_site_grams(store, lin_path)
             newlin = _quantize_one(W, pooled, qspec, method, sub)
             A0, B0 = newlin.pop("lora_a"), newlin.pop("lora_b")
-            # per-site CLoQ adapters into shared.site_lora
-            lora_key = rest.replace(".", "_")
             As, Bs = [], []
-            for sp in site_paths:
-                if method == "cloq":
+            if method == "cloq" and site_paths:
+                # the shared base Qd is identical for every site: hoisted
+                Qd = _shared_base_dequant(newlin, W.shape[0], qspec)
+                for sp in site_paths:
                     Hs = jnp.asarray(store.grams[sp], jnp.float32)
-                    from repro.core.quantizer import (dequantize_int,
-                                                      unpack_codes)
-                    codes = unpack_codes(newlin["qcodes"], qspec.bits, W.shape[0])
-                    Qd = dequantize_int(codes, newlin["scales"],
-                                        newlin["zeros"], qspec.group_size)
                     A_s, B_s = cloq_init(regularize_gram(Hs), W - Qd,
                                          qspec.rank, qspec.split)
-                else:
-                    A_s, B_s = A0, B0
-                As.append(A_s); Bs.append(B_s)
+                    As.append(A_s)
+                    Bs.append(B_s)
+            else:
+                As = [A0] * len(site_paths)
+                Bs = [B0] * len(site_paths)
             if As:
-                sl = dict(get_path(new_params, "shared.site_lora"))
-                sl[lora_key] = {"lora_a": jnp.stack(As).astype(cfg.dtype),
-                                "lora_b": jnp.stack(Bs).astype(cfg.dtype)}
-                set_path(new_params, "shared.site_lora", sl)
+                _set_site_lora(new_params, rest, jnp.stack(As),
+                               jnp.stack(Bs), cfg.dtype)
         else:
             H = store.grams.get(scope_path)
             newlin = _quantize_one(W, H, qspec, method, sub)
@@ -244,6 +280,105 @@ def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
         keep.update(_cast_for_model(newlin, cfg.dtype))
         set_path(new_params, lin_path, keep)
 
+
+# ---------------------------------------------------------------------------
+# Batched engine: flatten sites to tasks, bucket by shape, jit(vmap) each.
+# ---------------------------------------------------------------------------
+
+
+def _gather_tasks(eparams: dict, store: GramStore, seed: int):
+    """Flatten every quantization site into a LayerTask, splitting PRNG
+    keys in path order exactly like the sequential loop (bit-for-bit
+    random-init parity)."""
+    tasks: list[LayerTask] = []
+    groups: list[dict] = []
+    key = jax.random.PRNGKey(seed)
+    for lin_path in quantizable_linear_paths(eparams):
+        key, sub = jax.random.split(key)
+        lin = dict(get_path(eparams, lin_path))
+        W = lin.pop("w")
+        g = {"path": lin_path, "keep": lin, "W": W, "kind": "dense",
+             "tasks": []}
+        if W.ndim == 3:        # stacked MoE experts: a natural bucket
+            g["kind"] = "moe"
+            H = store.grams.get(_scope_for(lin_path))
+            keys = jax.random.split(sub, W.shape[0])
+            for e in range(W.shape[0]):
+                g["tasks"].append(len(tasks))
+                tasks.append(LayerTask(lin_path, e, W[e],
+                                       None if H is None else H[e], keys[e]))
+        elif lin_path.startswith("shared.block."):
+            g["kind"] = "shared"
+            rest, site_paths, pooled = _shared_site_grams(store, lin_path)
+            g["rest"], g["site_paths"] = rest, site_paths
+            g["tasks"].append(len(tasks))
+            tasks.append(LayerTask(lin_path, None, W, pooled, sub))
+        else:
+            g["tasks"].append(len(tasks))
+            tasks.append(LayerTask(lin_path, None, W,
+                                   store.grams.get(_scope_for(lin_path)),
+                                   sub))
+        groups.append(g)
+    return tasks, groups
+
+
+def _quantize_model_batched(eparams: dict, store: GramStore, qspec: QSpec,
+                            method: str, seed: int, cfg: ModelConfig,
+                            new_params: dict,
+                            progress: Callable[[str], None] | None) -> None:
+    tasks, groups = _gather_tasks(eparams, store, seed)
+    results = quantize_layer_batch(tasks, qspec, method, progress=progress)
+    for g in groups:
+        if g["kind"] == "moe":
+            outs = [results[i] for i in g["tasks"]]
+            newlin = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        else:
+            newlin = dict(results[g["tasks"][0]])
+        if g["kind"] == "shared":
+            A0, B0 = newlin.pop("lora_a"), newlin.pop("lora_b")
+            site_paths = g["site_paths"]
+            if site_paths:
+                if method == "cloq":
+                    W = jnp.asarray(g["W"], jnp.float32)
+                    Qd = _shared_base_dequant(newlin, W.shape[0], qspec)
+                    dW = W - Qd
+                    Hs = jnp.stack([jnp.asarray(store.grams[sp], jnp.float32)
+                                    for sp in site_paths])
+                    As, Bs = jax.vmap(
+                        lambda Hsite: cloq_init(regularize_gram(Hsite), dW,
+                                                qspec.rank, qspec.split))(Hs)
+                else:
+                    As = jnp.stack([A0] * len(site_paths))
+                    Bs = jnp.stack([B0] * len(site_paths))
+                _set_site_lora(new_params, g["rest"], As, Bs, cfg.dtype)
+        keep = {k: v for k, v in g["keep"].items()}     # bias etc.
+        keep.update(_cast_for_model(newlin, cfg.dtype))
+        set_path(new_params, g["path"], keep)
+
+
+_ENGINES = {"batched": _quantize_model_batched,
+            "sequential": _quantize_model_sequential}
+
+
+def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
+                   *, method: str = "cloq", qspec: QSpec | None = None,
+                   seed: int = 0, engine: str = "batched",
+                   progress: Callable[[str], None] | None = None):
+    """Quantize all block linears of ``params``.
+
+    ``engine`` selects the batched bucket engine (default) or the
+    sequential per-layer fallback; both produce the same leaves (see module
+    docstring).  Returns (new_params in the input (scan/eager) layout,
+    new_cfg with ``quant=qspec`` set, gram_store)."""
+    if engine not in _ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; options "
+                         f"{tuple(_ENGINES)}")
+    qspec = qspec or cfg.quant or QSpec()
+    eparams = to_eager_params(params, cfg)
+    store = run_calibration(eparams, cfg, calib_batches)
+    new_params = jax.tree.map(lambda a: a, eparams)   # structural copy
+    _ENGINES[engine](eparams, store, qspec, method, seed, cfg, new_params,
+                     progress)
     new_cfg = dataclasses.replace(cfg, quant=qspec)
     if cfg.scan_layers:
         new_params = to_scan_params(new_params, cfg)

@@ -8,6 +8,8 @@ fall back to the pure-jnp reference for shapes the tiling cannot cover
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -31,7 +33,7 @@ def dequant_matmul(x: Array, packed: Array, scales: Array, zeros: Array, *,
     K = x.shape[-1]
     N = packed.shape[-1]
     g = K if group_size is None else group_size
-    M = int(jnp.asarray(x.shape[:-1]).prod()) if x.ndim > 1 else 1
+    M = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
     tileable = (K % g == 0 and packed.shape[0] * _pack_factor(bits) == K)
     # tiles need M, N, K covered by block multiples; fall back otherwise
     if not tileable or M % 8 or N % 128 or K % g:
@@ -51,7 +53,7 @@ def dequant_matmul(x: Array, packed: Array, scales: Array, zeros: Array, *,
 
 def gram(x: Array, *, interpret: bool = True) -> Array:
     D = x.shape[-1]
-    T = int(jnp.asarray(x.shape[:-1]).prod())
+    T = math.prod(x.shape[:-1])
     if D % 128 or T % 8:
         return ref.gram_ref(x.reshape(-1, D))
     bt = 512 if T % 512 == 0 else (8 if T % 8 == 0 else T)

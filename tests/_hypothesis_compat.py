@@ -1,0 +1,70 @@
+"""``hypothesis`` import-or-fallback for the property-based test modules.
+
+The seed container does not ship ``hypothesis``; importing it at module
+scope aborted the whole ``pytest -x`` collection.  With hypothesis
+installed this module is a pure re-export.  Without it, ``given`` degrades
+to a deterministic mini-runner: each test executes ``_N_EXAMPLES`` examples
+drawn from a seeded ``numpy`` Generator, covering the same strategy space
+(``integers``/``floats``/``sampled_from``/``composite``) with fixed seeds
+so failures reproduce.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _N_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def sampled_from(seq):
+            elems = list(seq)
+            return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+        @staticmethod
+        def composite(fn):
+            def build(*args, **kwargs):
+                def sample(rng):
+                    return fn(lambda strat: strat.example(rng),
+                              *args, **kwargs)
+                return _Strategy(sample)
+            return build
+
+    st = _Strategies()
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # deliberately no functools.wraps: pytest must see a
+            # zero-argument signature (the drawn values are not fixtures)
+            def wrapper():
+                for ex in range(_N_EXAMPLES):
+                    rng = np.random.default_rng(ex)
+                    fn(*[s.example(rng) for s in strategies])
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

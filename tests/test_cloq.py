@@ -1,7 +1,7 @@
 """Theorem 3.1 and CLoQ-core properties (the paper's central math)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.cloq import (cloq_init, discrepancy_norms, gram_root,
                              lowrank_objective, regularize_gram, split_factors)

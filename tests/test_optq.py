@@ -1,7 +1,7 @@
 """OPTQ sweep correctness properties."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.optq import (dampen, gram_error, inv_cholesky_upper,
                              optq_error, optq_quantize)

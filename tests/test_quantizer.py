@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.quantizer import (NF4_LEVELS, QuantConfig, dequantize_int,
                                   dequantize_nf4, pack_codes, quant_params,
