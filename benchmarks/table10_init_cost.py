@@ -10,11 +10,20 @@ stack) is timed against one ``jit(vmap)`` dispatch over the stacked bucket
 (``batched_s``).  Wall-times are best-of-``REPS`` to tame shared-machine
 noise; the ``speedup`` column is what ``quantize_model`` gains on models
 whose linears bucket well.  Large single layers amortize poorly on a
-serial-BLAS host — those go to the sharded path instead (DESIGN.md §3)."""
+serial-BLAS host — those go to the sharded path instead (DESIGN.md §3).
+
+The ``sharded_rows`` section measures the *distributed* batched engine: on
+a multi-device mesh (a subprocess with fake CPU devices here), a bucket of
+N layers run as ONE fused shard_map(vmap) program
+(``run_bucket_sharded``) vs the per-layer sharded status quo (a Python
+loop of ``optq_quantize_sharded`` + ``cloq_init_sharded`` dispatches)."""
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -81,6 +90,76 @@ def _bucket_row(m: int, n: int, n_layers: int, qspec: QSpec, rng) -> dict:
             "speedup": round(t_seq / t_bat, 2)}
 
 
+# Distributed-engine comparison, run in a subprocess so we control the fake
+# device count regardless of how the parent process initialized jax.
+_SHARDED_SNIPPET = """
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.batched import (LayerTask, per_layer_sharded_dispatch,
+                                plan_buckets, quantize_layer_batch)
+from repro.models.modules import QSpec
+
+m, n, L, reps = {m}, {n}, {L}, {reps}
+rng = np.random.default_rng(0)
+mesh = jax.make_mesh((len(jax.devices()),), ("model",))
+qspec = QSpec(bits=2, group_size=64, rank=16)
+Ws = [jnp.asarray(rng.normal(size=(m, n)), jnp.float32) for _ in range(L)]
+Hs = []
+for _ in range(L):
+    X = rng.normal(size=(1024, m)).astype(np.float32)
+    Hs.append(jnp.asarray(X.T @ X))
+keys = jax.random.split(jax.random.PRNGKey(0), L)
+tasks = [LayerTask(f"l{{i}}", None, Wi, Hi, ki)
+         for i, (Wi, Hi, ki) in enumerate(zip(Ws, Hs, keys))]
+spec = next(iter(plan_buckets(tasks, qspec, "cloq", mesh=mesh)))
+
+def per_layer():
+    outs = per_layer_sharded_dispatch(tasks, qspec, mesh)
+    jax.block_until_ready(outs[-1][0])
+
+def fused():
+    outs = quantize_layer_batch(tasks, qspec, "cloq", mesh=mesh)
+    jax.block_until_ready(outs[-1]["lora_a"])
+
+per_layer(); fused()                       # compile before timing
+def best(f):
+    ts = []
+    for _ in range(reps):
+        t0 = time.time(); f(); ts.append(time.time() - t0)
+    return min(ts)
+t_layer, t_fused = best(per_layer), best(fused)
+print("RESULT " + json.dumps({{
+    "m": m, "n": n, "n_layers": L, "n_devices": len(jax.devices()),
+    "n_shards": spec.n_shards,
+    "per_layer_sharded_s": round(t_layer, 3),
+    "sharded_batched_s": round(t_fused, 3),
+    "speedup": round(t_layer / t_fused, 2)}}))
+"""
+
+
+def _sharded_bucket_row(m: int, n: int, n_layers: int,
+                        n_devices: int = 2) -> dict:
+    """Time one fused sharded bucket vs per-layer sharded dispatch in a
+    fresh subprocess with ``n_devices`` fake CPU devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count="
+                        f"{n_devices}").strip()
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    code = textwrap.dedent(_SHARDED_SNIPPET).format(m=m, n=n, L=n_layers,
+                                                    reps=REPS)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        return {"m": m, "n": n, "n_layers": n_layers,
+                "error": proc.stderr.strip().splitlines()[-1:]}
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
 def run() -> dict:
     rng = np.random.default_rng(0)
     dims = [(512, 512), (1024, 1024)] if FAST else \
@@ -116,14 +195,33 @@ def run() -> dict:
         print(f"  bucket {m}x{n} x{n_layers}: seq={row['sequential_s']}s "
               f"batched={row['batched_s']}s ({row['speedup']}x)", flush=True)
 
+    sharded_rows = []
+    for (m, n, n_layers) in ([(64, 64, 16)] if FAST else
+                             [(64, 64, 16), (128, 128, 16)]):
+        row = _sharded_bucket_row(m, n, n_layers)
+        sharded_rows.append(row)
+        if "error" in row:
+            print(f"  sharded bucket {m}x{n}: failed {row['error']}",
+                  flush=True)
+        else:
+            print(f"  sharded bucket {m}x{n} x{n_layers} "
+                  f"({row['n_devices']} dev): "
+                  f"per-layer={row['per_layer_sharded_s']}s "
+                  f"fused={row['sharded_batched_s']}s "
+                  f"({row['speedup']}x)", flush=True)
+
     out = {"rows": rows,
            "batched_rows": batched_rows,
            "batched_speedup_best": max(r["speedup"] for r in batched_rows),
+           "sharded_rows": sharded_rows,
            "note": ("paper Table 10: comparable runtimes; CLoQ trades "
                     "LoftQ's 5 SVD iterations for OPTQ+2 SVDs.  batched_s: "
                     "one jit(vmap) dispatch over a bucket of same-shape "
                     "layers vs the sequential per-layer engine loop "
-                    f"(best of {REPS})")}
+                    f"(best of {REPS}).  sharded_rows: the distributed "
+                    "engine — one fused shard_map(vmap) program per bucket "
+                    "vs per-layer sharded dispatches, on fake CPU devices "
+                    "in a subprocess")}
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "table10_init_cost.json"), "w") as f:
         json.dump(out, f, indent=1)

@@ -24,29 +24,70 @@ This module batches it:
     factorized in parallel.  Per-task PRNG keys are threaded through so
     random LoRA inits match the sequential path bit-for-bit.
 
+3.  **Sharding** (:func:`run_bucket_sharded`): on a multi-device mesh the
+    planner assigns each bucket ``n_shards`` column shards over the
+    ``model`` axis (falling back to ``1`` = replicated when ``n`` doesn't
+    divide the axis, or the method needs a full-width SVD).  The bucket
+    then runs as **one** ``shard_map`` whose body vmaps the same per-layer
+    core over the local ``(L, m, n_local)`` shard — sharding composed
+    *inside* the vmapped bucket, so an L-layer bucket on D devices costs a
+    single dispatch instead of L per-layer sharded dispatches.  The only
+    communication is CLoQ's Gram-trick psum: one ``(L, m, m)`` all-reduce
+    per bucket.
+
+4.  **Streaming** (:func:`quantize_layer_batch` with ``stream=True``):
+    bucket execution is double-buffered — host stacking of bucket ``k+1``
+    overlaps with device compute of bucket ``k`` via JAX's async dispatch,
+    so the host-side gather never serializes with device math.
+
 The sequential per-layer path in :mod:`repro.core.pipeline` remains as the
-fallback and as the numerical-parity oracle (``tests/test_batched.py``).
+fallback and as the numerical-parity oracle (``tests/test_batched.py``,
+``tests/test_batched_sharded.py``).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cloq import cloq_init, regularize_gram
+from repro.core.cloq import (cloq_init, cloq_init_sharded,
+                             cloq_lowrank_local, gram_root, regularize_gram)
 from repro.core.loftq import loftq_init, qlora_init
 from repro.core.magr import magr_preprocess
-from repro.core.optq import optq_quantize_core, pick_block
+from repro.core.optq import (optq_quantize_core, optq_quantize_sharded,
+                             pick_block)
 from repro.core.quantizer import QuantConfig, pack_codes, quantize_int
 
 Array = jax.Array
 
 # methods whose base quantization consumes a calibration Gram
 GRAM_METHODS = ("cloq", "gptq")
+
+# methods whose whole stack is column-local (or Gram-trick exact) and can
+# run column-sharded; loftq's AltMin needs the full-width SVD of (W - Q)
+# and stays replicated.
+SHARDABLE_METHODS = ("cloq", "gptq", "rtn", "qlora")
+
+
+def bucket_shards(n: int, method: str, mesh=None,
+                  axis: str = "model") -> int:
+    """Column-shard count the planner assigns a bucket: the ``axis`` size of
+    ``mesh`` when the method supports column sharding and ``n`` divides it,
+    else ``1`` (replicated fallback).
+
+    >>> bucket_shards(48, "cloq", mesh=None)
+    1
+    """
+    if mesh is None or axis not in getattr(mesh, "axis_names", ()):
+        return 1
+    k = int(mesh.shape[axis])
+    if k <= 1 or method not in SHARDABLE_METHODS or n % k != 0:
+        return 1
+    return k
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +107,7 @@ class BucketSpec:
     magr: bool               # MagR gate (bits <= 4), resolved at plan time
     magr_iters: int
     has_gram: bool
+    n_shards: int = 1        # column shards over the model axis (1 = local)
 
 
 @dataclasses.dataclass
@@ -80,8 +122,14 @@ class LayerTask:
 
 
 def make_spec(m: int, n: int, qspec, method: str, has_gram: bool,
-              base: QuantConfig | None = None) -> BucketSpec:
-    """Resolve all static/branching decisions for one (shape, method)."""
+              base: QuantConfig | None = None, *, mesh=None,
+              axis: str = "model") -> BucketSpec:
+    """Resolve all static/branching decisions for one (shape, method).
+
+    With ``mesh``, the bucket's column-shard count over ``axis`` is also
+    resolved here (see :func:`bucket_shards`), so the executor's choice of
+    :func:`run_bucket` vs :func:`run_bucket_sharded` is a pure plan-time
+    lookup."""
     base = base or QuantConfig(bits=qspec.bits, group_size=qspec.group_size)
     return BucketSpec(
         m=m, n=n, method=method, bits=qspec.bits,
@@ -90,28 +138,65 @@ def make_spec(m: int, n: int, qspec, method: str, has_gram: bool,
         act_order=base.act_order, lambda_frac=base.lambda_frac,
         magr=(method == "cloq" and qspec.bits <= 4),
         magr_iters=base.magr_iters,
-        has_gram=has_gram and method in GRAM_METHODS)
+        has_gram=has_gram and method in GRAM_METHODS,
+        n_shards=bucket_shards(n, method, mesh, axis))
+
+
+def magr_alpha(H: Array, m: int) -> Array:
+    """MagR regularization strength ``0.001 * tr(H) / m`` — a traced scalar
+    (no host sync), shared by every engine path so they all gate and weight
+    MagR identically."""
+    return 0.001 * jnp.trace(H) / m
+
+
+def spec_qcfg(spec: BucketSpec) -> QuantConfig:
+    """Expand a plan-time :class:`BucketSpec` into the :class:`QuantConfig`
+    the traced cores consume (single source of truth for the mapping)."""
+    return QuantConfig(bits=spec.bits, group_size=spec.group_size,
+                       block_size=spec.block_size, act_order=spec.act_order,
+                       lambda_frac=spec.lambda_frac)
 
 
 def quantize_single(W: Array, H: Array | None, key: Array,
-                    spec: BucketSpec) -> dict:
+                    spec: BucketSpec, axis: str | None = None) -> dict:
     """Traced single-layer core (host-sync free).  Mirrors the sequential
     ``pipeline._quantize_one`` but with every static decision pre-resolved
-    in ``spec`` — safe under ``jax.vmap``."""
-    qcfg = QuantConfig(bits=spec.bits, group_size=spec.group_size,
-                       block_size=spec.block_size, act_order=spec.act_order,
-                       lambda_frac=spec.lambda_frac)
-    m, n = spec.m, spec.n
+    in ``spec`` — safe under ``jax.vmap``.
+
+    Args:
+        W:    (m, n_local) weight — the full layer when ``axis`` is None, or
+              one column shard inside a ``shard_map`` body.
+        H:    (m, m) calibration Gram, always replicated (full); ``None``
+              for data-free methods.
+        key:  (2,) PRNG key, replicated across shards so random LoRA inits
+              agree on every device.
+        spec: static bucket signature (shapes, method, grid, gates).
+        axis: mesh axis name when running as the shard-local body of
+              :func:`run_bucket_sharded`; selects CLoQ's Gram-trick solve
+              (``cloq_lowrank_local``, one psum) over the dense SVD.  All
+              other ops are per-column and need no communication.
+
+    Returns a dict of leaves; column-dimension leaves (``qcodes``,
+    ``scales``, ``zeros``, ``absmax``, ``lora_b``) cover only the local
+    columns when sharded, ``lora_a`` is replicated."""
+    qcfg = spec_qcfg(spec)
     W = jnp.asarray(W, jnp.float32)
+    m, n = spec.m, W.shape[1]          # n is shard-local under shard_map
     if spec.method == "cloq":
         H = jnp.asarray(H, jnp.float32)
         if spec.magr:
-            alpha = 0.001 * jnp.trace(H) / m       # traced, no host sync
-            Wp = magr_preprocess(W, H, alpha=alpha, iters=spec.magr_iters)
+            Wp = magr_preprocess(W, H, alpha=magr_alpha(H, m),
+                                 iters=spec.magr_iters)
         else:
             Wp = W
         Qd, Qc, s, z = optq_quantize_core(Wp, H, qcfg)
-        A, B = cloq_init(regularize_gram(H), W - Qd, spec.rank, spec.split)
+        Hreg = regularize_gram(H)
+        if axis is None:
+            A, B = cloq_init(Hreg, W - Qd, spec.rank, spec.split)
+        else:
+            R, Rinv = gram_root(Hreg)
+            A, B = cloq_lowrank_local(R, Rinv, W - Qd, spec.rank,
+                                      spec.split, axis)
         return {"qcodes": pack_codes(Qc, spec.bits), "scales": s, "zeros": z,
                 "lora_a": A, "lora_b": B}
     if spec.method == "gptq":
@@ -146,9 +231,17 @@ def run_bucket(Ws: Array, Hs: Array | None, keys: Array,
     """One compiled executable per bucket signature: vmap of
     :func:`quantize_single` over stacked layers.
 
-    ``Ws`` is ``(L, m, n)``, ``Hs`` is ``(L, m, m)`` or ``None`` (methods
-    that don't consume a Gram), ``keys`` is ``(L, 2)``.  Returns a dict of
-    stacked leaves (leading dim ``L``)."""
+    Args:
+        Ws:   (L, m, n) stacked weights of the bucket.
+        Hs:   (L, m, m) stacked calibration Grams, or ``None`` for methods
+              that don't consume one.
+        keys: (L, 2) per-task PRNG keys (split in path order by the driver
+              so random LoRA inits match the sequential engine).
+        spec: static bucket signature (jit static argument).
+
+    Returns a dict of stacked leaves (leading dim ``L``).  Runs entirely on
+    the local device; for the multi-device variant see
+    :func:`run_bucket_sharded`."""
     if Hs is None:
         return jax.vmap(
             lambda W, k: quantize_single(W, None, k, spec))(Ws, keys)
@@ -156,10 +249,129 @@ def run_bucket(Ws: Array, Hs: Array | None, keys: Array,
         lambda W, H, k: quantize_single(W, H, k, spec))(Ws, Hs, keys)
 
 
+def bucket_out_specs(method: str, axis: str = "model"):
+    """PartitionSpecs of one sharded bucket's output leaves (leading dim L).
+
+    Column-dimension leaves (``qcodes``/``scales``/``zeros``/``absmax``)
+    shard their last dim over ``axis``; ``lora_b`` (L, n, r) shards its
+    middle (column) dim; ``lora_a`` (L, m, r) is replicated — CLoQ's
+    Gram-trick psum (and the replicated PRNG key for the random-init
+    baselines) makes it identical on every device."""
+    from jax.sharding import PartitionSpec as P
+    col = P(None, None, axis)
+    rep = P(None, None, None)
+    if method == "qlora":
+        return {"qcodes": col, "absmax": col,
+                "lora_a": rep, "lora_b": P(None, axis, None)}
+    return {"qcodes": col, "scales": col, "zeros": col,
+            "lora_a": rep, "lora_b": P(None, axis, None)}
+
+
+@lru_cache(maxsize=64)
+def _sharded_executable(spec: BucketSpec, mesh, axis: str):
+    """Compiled shard_map(vmap(quantize_single)) for one (spec, mesh) pair.
+
+    Cached so repeated buckets with the same signature reuse the
+    executable, mirroring ``run_bucket``'s jit cache.  Bounded so a
+    long-lived process sweeping many distinct meshes doesn't pin compiled
+    executables (and their Mesh references) forever."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    out_specs = bucket_out_specs(spec.method, axis)
+
+    if spec.has_gram:
+        def local(Ws_l, Hs_l, keys_l):
+            return jax.vmap(lambda W, H, k: quantize_single(
+                W, H, k, spec, axis=axis))(Ws_l, Hs_l, keys_l)
+        in_specs = (P(None, None, axis), P(None, None, None), P(None, None))
+    else:
+        def local(Ws_l, keys_l):
+            return jax.vmap(lambda W, k: quantize_single(
+                W, None, k, spec, axis=axis))(Ws_l, keys_l)
+        in_specs = (P(None, None, axis), P(None, None))
+
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    return jax.jit(fn)
+
+
+def run_bucket_sharded(Ws: Array, Hs: Array | None, keys: Array,
+                       spec: BucketSpec, mesh, axis: str = "model") -> dict:
+    """Distributed bucket executable: ``shard_map`` over the ``axis`` mesh
+    axis whose body vmaps :func:`quantize_single` over the bucket's layers.
+
+    Args:
+        Ws:   (L, m, n) stacked weights; the column dim ``n`` must be
+              divisible by ``mesh.shape[axis]`` (the planner guarantees
+              this — ``spec.n_shards > 1`` only when it holds).
+        Hs:   (L, m, m) stacked Grams (replicated to every device) or
+              ``None``.
+        keys: (L, 2) per-task PRNG keys, replicated.
+        spec: static bucket signature with ``spec.n_shards > 1``.
+        mesh: a ``jax.sharding.Mesh`` carrying ``axis``.
+        axis: mesh axis name to column-shard over (default ``"model"``).
+
+    Each device sweeps its ``(L, m, n/D)`` column shard of the whole
+    MagR→OPTQ→CLoQ (or baseline) stack in one fused program; the only
+    communication is CLoQ's ``(L, m, m)`` Gram psum.  Returns the same
+    stacked leaf dict as :func:`run_bucket`, with column leaves sharded
+    and ``lora_a`` replicated."""
+    fn = _sharded_executable(spec, mesh, axis)
+    if spec.has_gram:
+        return fn(Ws, Hs, keys)
+    return fn(Ws, keys)
+
+
+def per_layer_sharded_dispatch(tasks: list[LayerTask], qspec, mesh,
+                               axis: str = "model",
+                               base: QuantConfig | None = None) -> list:
+    """The pre-bucket status quo: one sharded OPTQ dispatch + one sharded
+    CLoQ dispatch *per layer* (MagR replicated on the host side).
+
+    Kept as the baseline that :func:`run_bucket_sharded` is measured
+    against (``benchmarks/table10_init_cost.py`` ``sharded_rows``,
+    ``examples/distributed_quantize.py``) — defined here, next to
+    :func:`quantize_single`, so the MagR gate and alpha stay the single
+    source of truth for both paths.  Returns per-task ``(A, B)`` pairs."""
+    outs = []
+    for t in tasks:
+        m, n = t.W.shape
+        spec = make_spec(m, n, qspec, "cloq", t.H is not None, base,
+                         mesh=mesh, axis=axis)
+        qcfg = spec_qcfg(spec)
+        W = jnp.asarray(t.W, jnp.float32)
+        H = jnp.asarray(t.H, jnp.float32)
+        if spec.magr:
+            W_q = magr_preprocess(W, H, alpha=magr_alpha(H, m),
+                                  iters=spec.magr_iters)
+        else:
+            W_q = W
+        Qd, _, _, _ = optq_quantize_sharded(W_q, H, qcfg, mesh, axis)
+        A, B = cloq_init_sharded(regularize_gram(H), W - Qd, spec.rank,
+                                 mesh, axis, spec.split)
+        outs.append((A, B))
+    return outs
+
+
 def plan_buckets(tasks: list[LayerTask], qspec, method: str,
-                 base: QuantConfig | None = None
-                 ) -> dict[BucketSpec, list[int]]:
-    """Group task indices by executable signature (insertion-ordered)."""
+                 base: QuantConfig | None = None, *, mesh=None,
+                 axis: str = "model") -> dict[BucketSpec, list[int]]:
+    """Group task indices by executable signature (insertion-ordered).
+
+    Args:
+        tasks:  flattened quantization sites (see :class:`LayerTask`).
+        qspec:  ``repro.models.modules.QSpec`` — bits/group/rank/split.
+        method: init method name (``cloq``/``gptq``/``loftq``/``qlora``/
+                ``rtn``).
+        base:   optional :class:`QuantConfig` overriding sweep defaults.
+        mesh:   optional ``jax.sharding.Mesh``; buckets whose column count
+                divides ``mesh.shape[axis]`` (and whose method is in
+                :data:`SHARDABLE_METHODS`) get ``n_shards > 1`` and run via
+                :func:`run_bucket_sharded`; the rest fall back to the
+                replicated :func:`run_bucket`.
+        axis:   mesh axis name for column sharding.
+
+    Returns an insertion-ordered ``{BucketSpec: [task indices]}``."""
     buckets: dict[BucketSpec, list[int]] = {}
     for i, t in enumerate(tasks):
         m, n = t.W.shape
@@ -168,30 +380,87 @@ def plan_buckets(tasks: list[LayerTask], qspec, method: str,
             raise ValueError(
                 f"method {method!r} needs a calibration Gram for {t.path}"
                 f"{'' if t.expert is None else f'[expert {t.expert}]'}")
-        spec = make_spec(m, n, qspec, method, has_gram, base)
+        spec = make_spec(m, n, qspec, method, has_gram, base,
+                         mesh=mesh, axis=axis)
         buckets.setdefault(spec, []).append(i)
     return buckets
 
 
+def _stage_bucket(tasks: list[LayerTask], idxs: list[int],
+                  spec: BucketSpec):
+    """Host-side staging of one bucket: stack (W, H, key) to device arrays.
+
+    This is the host work the streaming executor overlaps with device
+    compute of the previous bucket."""
+    Ws = jnp.stack([jnp.asarray(tasks[i].W, jnp.float32) for i in idxs])
+    Hs = None
+    if spec.has_gram:
+        Hs = jnp.stack([jnp.asarray(tasks[i].H, jnp.float32)
+                        for i in idxs])
+    keys = jnp.stack([tasks[i].key for i in idxs])
+    return Ws, Hs, keys
+
+
 def quantize_layer_batch(tasks: list[LayerTask], qspec, method: str,
                          base: QuantConfig | None = None,
-                         progress: Callable[[str], None] | None = None
-                         ) -> list[dict]:
-    """Quantize all ``tasks`` bucket-by-bucket.  Returns one leaf dict per
-    task, in task order (same leaves as the sequential path)."""
-    buckets = plan_buckets(tasks, qspec, method, base)
+                         progress: Callable[[str], None] | None = None,
+                         *, mesh=None, axis: str = "model",
+                         stream: bool = True) -> list[dict]:
+    """Quantize all ``tasks`` bucket-by-bucket.
+
+    The model-level batched engine entry point
+    (``pipeline.quantize_model(engine="batched")`` drives it).
+
+    Args:
+        tasks:    flattened quantization sites, one per (layer | expert).
+        qspec:    ``QSpec`` with bits/group_size/rank/split.
+        method:   init method (see module docstring).
+        base:     optional ``QuantConfig`` overriding sweep defaults.
+        progress: optional callback, called once per *bucket* with a
+                  human-readable line.
+        mesh:     optional ``jax.sharding.Mesh``: buckets run column-sharded
+                  over ``axis`` where the planner allows (see
+                  :func:`plan_buckets`); ``None`` = single-device.
+        axis:     mesh axis name (default ``"model"``).
+        stream:   double-buffered bucket streaming (default on): bucket
+                  ``k``'s executable is dispatched asynchronously and the
+                  host immediately stages bucket ``k+1``'s stacked arrays
+                  while the device computes.  ``stream=False`` serializes
+                  (block on each bucket before staging the next) — same
+                  results, used as the ordering oracle in tests.
+
+    Returns one leaf dict per task, in task order (same leaves as the
+    sequential path)."""
+    buckets = plan_buckets(tasks, qspec, method, base, mesh=mesh, axis=axis)
     results: list[dict | None] = [None] * len(tasks)
-    for b, (spec, idxs) in enumerate(buckets.items()):
+    items = list(buckets.items())
+
+    def dispatch(b: int, staged) -> tuple[list[int], dict]:
+        spec, idxs = items[b]
+        Ws, Hs, keys = staged
         if progress:
+            shard_note = (f" sharded x{spec.n_shards}"
+                          if spec.n_shards > 1 else "")
             progress(f"[bucket {b}] {spec.m}x{spec.n} "
-                     f"{spec.method} x{len(idxs)} layers")
-        Ws = jnp.stack([jnp.asarray(tasks[i].W, jnp.float32) for i in idxs])
-        Hs = None
-        if spec.has_gram:
-            Hs = jnp.stack([jnp.asarray(tasks[i].H, jnp.float32)
-                            for i in idxs])
-        keys = jnp.stack([tasks[i].key for i in idxs])
-        out = run_bucket(Ws, Hs, keys, spec)
+                     f"{spec.method} x{len(idxs)} layers{shard_note}")
+        if spec.n_shards > 1:
+            out = run_bucket_sharded(Ws, Hs, keys, spec, mesh, axis)
+        else:
+            out = run_bucket(Ws, Hs, keys, spec)
+        return idxs, out
+
+    staged = None
+    for b in range(len(items)):
+        if staged is None:
+            staged = _stage_bucket(tasks, items[b][1], items[b][0])
+        idxs, out = dispatch(b, staged)          # async dispatch
+        staged = None
+        if stream and b + 1 < len(items):
+            # double-buffer: stage bucket b+1 on the host while the device
+            # computes bucket b
+            staged = _stage_bucket(tasks, items[b + 1][1], items[b + 1][0])
+        elif not stream:
+            jax.block_until_ready(out)           # serialize (oracle mode)
         for j, i in enumerate(idxs):
             results[i] = {k: v[j] for k, v in out.items()}
     return results

@@ -18,7 +18,11 @@ Splits of ``A B^T = R^{-1} U_{:r} S_{:r} V_{:r}^T`` (paper Table 7):
 
 :func:`cloq_init_sharded` is the TPU-scale variant: ``dW`` column-sharded
 over the model axis, the SVD of ``R dW`` computed exactly via the Gram trick
-(one m x m psum per layer) — see DESIGN.md §3.
+(one m x m psum per layer) — see DESIGN.md §3.  Its shard-local body is
+:func:`cloq_lowrank_local`, which is **both** shard_map- and vmap-safe, so
+the batched quantization engine (:mod:`repro.core.batched`) maps it over a
+stacked ``(L, m, n_local)`` bucket *inside* a ``shard_map`` — one fused
+program per bucket, one ``(L, m, m)`` psum of communication.
 """
 from __future__ import annotations
 
@@ -99,15 +103,56 @@ def discrepancy_norms(H: Array, Q: Array, A: Array, B: Array, W: Array):
     return fro, spec
 
 
+def cloq_lowrank_local(R: Array, Rinv: Array, dW_local: Array, rank: int,
+                       split: str = "paper", axis: str | None = None):
+    """Shard-local body of the Gram-trick CLoQ solve.
+
+    Computes the exact top-``rank`` factorization of ``R^{-1} LR_r(R dW)``
+    from a **column shard** ``dW_local`` (m, n_local) of the residual:
+
+        G = (R dW)(R dW)^T        -- psum over ``axis`` when given (m x m)
+        eigh(G) -> U, S^2         -- replicated across shards
+        V_local = (R dW)_l^T U S^{-1}   -- shard-local
+
+    Args:
+        R, Rinv:  (m, m) non-symmetric Gram root and inverse
+                  (:func:`gram_root` of the *regularized* Gram), replicated.
+        dW_local: (m, n_local) local column shard of ``W - Q``.
+        rank:     adapter rank r (static).
+        split:    one of :data:`SPLITS` (static).
+        axis:     mesh axis name to all-reduce the m x m Gram over; ``None``
+                  means ``dW_local`` already holds all columns (single
+                  device / replicated fallback).
+
+    Returns ``(A (m, r) replicated, B_local (n_local, r))``.
+
+    Safe under both ``shard_map`` (the psum is the only communication) and
+    ``vmap`` (the batched engine maps it over a stacked ``(L, m, n_local)``
+    bucket inside one ``shard_map`` — psum then reduces a ``(L, m, m)``
+    stack in one collective).  Uses ``eigh`` of the m x m Gram rather than
+    the unsharded path's ``svd(R dW)``: the same subspace to float precision
+    (tests compare the ``A B^T`` product, which is the well-defined
+    quantity)."""
+    M_l = R @ dW_local                                  # (m, n_local)
+    G = M_l @ M_l.T                                     # (m, m)
+    if axis is not None:
+        G = jax.lax.psum(G, axis)
+    evals, evecs = jnp.linalg.eigh(G)                   # ascending
+    top = evals[::-1][:rank]
+    U = evecs[:, ::-1][:, :rank]
+    S = jnp.sqrt(jnp.maximum(top, 1e-30))
+    V_l = (M_l.T @ U) / S[None, :]                      # (n_local, r)
+    return split_factors(Rinv @ U, S, V_l, split)
+
+
 def cloq_init_sharded(H: Array, dW: Array, rank: int, mesh,
                       axis: str = "model", split: str = "paper"):
     """Distributed CLoQ: ``dW`` (m, n) column-sharded over ``axis``.
 
-    Exact top-r SVD of R dW via the Gram trick:
-        G = (R dW)(R dW)^T   -- psum over column shards (m x m)
-        eigh(G) -> U, S^2    -- replicated
-        V_local = (R dW)_l^T U S^{-1}  -- shard-local
-    Communication: one m*m f32 all-reduce per layer.
+    Per-layer wrapper over :func:`cloq_lowrank_local` (exact Gram-trick
+    SVD).  Communication: one m*m f32 all-reduce per layer.  The batched
+    engine fuses L of these into a single program — see
+    :func:`repro.core.batched.run_bucket_sharded`.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
@@ -116,15 +161,7 @@ def cloq_init_sharded(H: Array, dW: Array, rank: int, mesh,
     dW = jnp.asarray(dW, jnp.float32)
 
     def local(R_, Rinv_, dW_l):
-        M_l = R_ @ dW_l                                     # (m, n_local)
-        G = jax.lax.psum(M_l @ M_l.T, axis)                 # (m, m)
-        evals, evecs = jnp.linalg.eigh(G)                   # ascending
-        top = evals[::-1][:rank]
-        U = evecs[:, ::-1][:, :rank]
-        S = jnp.sqrt(jnp.maximum(top, 1e-30))
-        V_l = (M_l.T @ U) / S[None, :]                      # (n_local, r)
-        A, B_l = split_factors(Rinv_ @ U, S, V_l, split)
-        return A, B_l
+        return cloq_lowrank_local(R_, Rinv_, dW_l, rank, split, axis)
 
     fn = shard_map(local, mesh=mesh,
                    in_specs=(P(None, None), P(None, None), P(None, axis)),

@@ -12,6 +12,13 @@ MagR shrinks per-column outliers toward the pack while keeping the
 *calibrated* output ``X W~`` essentially unchanged — which tightens the
 min/max quantization grids that OPTQ then uses.  No inference-time overhead:
 W~ simply replaces W before quantization.
+
+Every step is **per output column** given the replicated Gram ``H``: the
+gradient ``H (W~ - W)``, the prox, and the projection all act column-wise,
+and the Lipschitz constant depends on ``H`` only.  The core is therefore
+shard_map-safe under column sharding (zero communication) as well as
+vmap-safe — the distributed batched engine runs it on ``(L, m, n_local)``
+bucket shards unchanged.
 """
 from __future__ import annotations
 

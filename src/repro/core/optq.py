@@ -9,7 +9,11 @@ dim ``m`` (rows), and all ``n`` output columns are compensated jointly
 TPU adaptation (DESIGN.md §3): the ``n`` dim is embarrassingly parallel, so
 :func:`optq_quantize_sharded` runs the same sweep under ``shard_map`` with
 ``W`` column-sharded over the model axis — distributed OPTQ with zero
-communication (H is replicated).
+communication (H is replicated).  The shard-local body is the same
+:func:`optq_quantize_core` the batched engine vmaps, so sharding and
+batching compose: one bucket of L same-shape layers runs as a single
+``shard_map`` whose body vmaps the sweep over its ``(L, m, n_local)``
+column shard (``repro.core.batched.run_bucket_sharded``).
 
 Static per-group quantization grids (GPTQ ``static_groups=True``) are
 computed up front from the (MagR-preprocessed) weights, which keeps the
@@ -126,9 +130,12 @@ def pick_block(m: int, block_size: int) -> int:
 def optq_quantize_core(W: Array, H: Array, cfg: QuantConfig,
                        scales: Array | None = None,
                        zeros: Array | None = None):
-    """Vmap-safe OPTQ sweep: pure traced ops, no host syncs, no shape
-    fallbacks.  ``cfg.block_size`` must already divide ``m`` — resolve it
-    with :func:`pick_block` at plan time.  Returns
+    """Vmap- and shard_map-safe OPTQ sweep: pure traced ops, no host syncs,
+    no shape fallbacks.  ``cfg.block_size`` must already divide ``m`` —
+    resolve it with :func:`pick_block` at plan time.  Every op is
+    per-column given the replicated ``H`` (grids, damping, sweep), so a
+    column shard of ``W`` yields exactly the corresponding shard of every
+    output with zero communication.  Returns
     (Q_dequant (m,n) f32, codes uint8, scales, zeros)."""
     W = jnp.asarray(W, jnp.float32)
     H = dampen(jnp.asarray(H, jnp.float32), cfg.lambda_frac)
@@ -169,23 +176,30 @@ def optq_quantize_sharded(W: Array, H: Array, cfg: QuantConfig, mesh,
     """Distributed OPTQ: columns (output channels) sharded over ``axis``.
 
     H is replicated; the sweep needs no communication (columns independent).
+    The shard-local body is :func:`optq_quantize_core` — grids, damping and
+    the sweep are all per-column, so each shard computes exactly the columns
+    it owns.  The sweep block is resolved here (plan time) so the traced
+    core is shard_map- *and* vmap-safe; the batched engine reuses the same
+    core inside one fused program per bucket
+    (:func:`repro.core.batched.run_bucket_sharded`).
+
+    Returns ``(Qd (m, n), codes uint8, scales (m/g, n), zeros (m/g, n))``
+    with every leaf except ``H`` column-sharded over ``axis``.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
     W = jnp.asarray(W, jnp.float32)
-    Hd = dampen(jnp.asarray(H, jnp.float32), cfg.lambda_frac)
-    scales, zeros = quant_params(W, cfg.bits, cfg.group_size)
-    srow, zrow = _per_row_grids(scales, zeros, W.shape[0], cfg.group_size)
+    H = jnp.asarray(H, jnp.float32)
     bs = pick_block(W.shape[0], cfg.block_size)
+    if bs != cfg.block_size:
+        cfg = dataclasses.replace(cfg, block_size=bs)
 
-    def local(Wl, Hl, sl, zl):
-        return _optq_core(Wl, Hl, sl, zl, bits=cfg.bits, block_size=bs,
-                          act_order=cfg.act_order)
+    def local(Wl, H_):
+        return optq_quantize_core(Wl, H_, cfg)
 
+    col = P(None, axis)
     fn = shard_map(local, mesh=mesh,
-                   in_specs=(P(None, axis), P(None, None),
-                             P(None, axis), P(None, axis)),
-                   out_specs=(P(None, axis), P(None, axis)))
-    Qd, Qc = fn(W, Hd, srow, zrow)
-    return Qd, Qc, scales, zeros
+                   in_specs=(col, P(None, None)),
+                   out_specs=(col, col, col, col))
+    return fn(W, H)

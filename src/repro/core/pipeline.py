@@ -25,6 +25,12 @@ resolved at *plan* time so the traced cores stay vmap-safe.  Per-site PRNG
 keys are split in path order, exactly like the sequential loop, so random
 LoRA inits agree bit-for-bit.
 
+On a multi-device mesh (``quantize_model(..., mesh=...)``) the batched
+engine additionally column-shards each bucket over the ``model`` axis —
+``shard_map`` composed *inside* the vmapped bucket — and streams buckets
+(double-buffered host staging).  See :mod:`repro.core.batched` and
+``docs/architecture.md``.
+
 ``engine="sequential"`` is the original per-layer Python loop, kept as the
 fallback and as the numerical-parity oracle (``tests/test_batched.py``
 asserts both engines produce allclose leaves, including the stacked-MoE
@@ -46,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batched import LayerTask, quantize_layer_batch
+from repro.core.batched import LayerTask, magr_alpha, quantize_layer_batch
 from repro.core.cloq import cloq_init, regularize_gram
 from repro.core.loftq import loftq_init, qlora_init
 from repro.core.magr import magr_preprocess
@@ -174,7 +180,7 @@ def _quantize_one(W: Array, H: Array | None, qspec: QSpec, method: str,
         H = jnp.asarray(H, jnp.float32)
         # traced alpha (same arithmetic as the batched core: f32, no host
         # sync) so both engines quantize identically
-        Wp = magr_preprocess(W, H, alpha=0.001 * jnp.trace(H) / m,
+        Wp = magr_preprocess(W, H, alpha=magr_alpha(H, m),
                              iters=20) if qspec.bits <= 4 else W
         Qd, Qc, s, z = optq_quantize(Wp, H, qcfg)
         A, B = cloq_init(regularize_gram(H), W - Qd, qspec.rank, qspec.split)
@@ -231,7 +237,9 @@ def _set_site_lora(new_params: dict, rest: str, As, Bs, dtype) -> None:
 def _quantize_model_sequential(eparams: dict, store: GramStore, qspec: QSpec,
                                method: str, seed: int, cfg: ModelConfig,
                                new_params: dict,
-                               progress: Callable[[str], None] | None) -> None:
+                               progress: Callable[[str], None] | None,
+                               mesh=None, shard_axis: str = "model") -> None:
+    assert mesh is None, "quantize_model rejects mesh+sequential up front"
     key = jax.random.PRNGKey(seed)
     for i, lin_path in enumerate(quantizable_linear_paths(eparams)):
         key, sub = jax.random.split(key)
@@ -325,9 +333,11 @@ def _gather_tasks(eparams: dict, store: GramStore, seed: int):
 def _quantize_model_batched(eparams: dict, store: GramStore, qspec: QSpec,
                             method: str, seed: int, cfg: ModelConfig,
                             new_params: dict,
-                            progress: Callable[[str], None] | None) -> None:
+                            progress: Callable[[str], None] | None,
+                            mesh=None, shard_axis: str = "model") -> None:
     tasks, groups = _gather_tasks(eparams, store, seed)
-    results = quantize_layer_batch(tasks, qspec, method, progress=progress)
+    results = quantize_layer_batch(tasks, qspec, method, progress=progress,
+                                   mesh=mesh, axis=shard_axis)
     for g in groups:
         if g["kind"] == "moe":
             outs = [results[i] for i in g["tasks"]]
@@ -363,22 +373,36 @@ _ENGINES = {"batched": _quantize_model_batched,
 def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
                    *, method: str = "cloq", qspec: QSpec | None = None,
                    seed: int = 0, engine: str = "batched",
-                   progress: Callable[[str], None] | None = None):
+                   progress: Callable[[str], None] | None = None,
+                   mesh=None, shard_axis: str = "model"):
     """Quantize all block linears of ``params``.
 
     ``engine`` selects the batched bucket engine (default) or the
     sequential per-layer fallback; both produce the same leaves (see module
-    docstring).  Returns (new_params in the input (scan/eager) layout,
-    new_cfg with ``quant=qspec`` set, gram_store)."""
+    docstring).
+
+    ``mesh`` (batched engine only) runs each bucket column-sharded over
+    ``shard_axis``: one fused shard_map(vmap) program per bucket instead of
+    per-layer sharded dispatches, with buckets whose column count doesn't
+    divide the axis falling back to replicated execution
+    (:mod:`repro.core.batched`).  Leaves of sharded buckets come back as
+    committed sharded arrays; ``lora_a`` stays replicated.
+
+    Returns (new_params in the input (scan/eager) layout, new_cfg with
+    ``quant=qspec`` set, gram_store)."""
     if engine not in _ENGINES:
         raise ValueError(f"unknown engine {engine!r}; options "
                          f"{tuple(_ENGINES)}")
+    if mesh is not None and engine != "batched":
+        # fail before the (expensive) calibration pass, not after
+        raise ValueError("mesh sharding is only supported by the batched "
+                         "engine; use engine='batched' or drop mesh=")
     qspec = qspec or cfg.quant or QSpec()
     eparams = to_eager_params(params, cfg)
     store = run_calibration(eparams, cfg, calib_batches)
     new_params = jax.tree.map(lambda a: a, eparams)   # structural copy
     _ENGINES[engine](eparams, store, qspec, method, seed, cfg, new_params,
-                     progress)
+                     progress, mesh, shard_axis)
     new_cfg = dataclasses.replace(cfg, quant=qspec)
     if cfg.scan_layers:
         new_params = to_scan_params(new_params, cfg)

@@ -22,6 +22,16 @@ def make_local_mesh(n_data: int = 1, n_model: int = 1, n_pod: int | None = None)
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_model_mesh(n_model: int | None = None):
+    """1-D ``("model",)`` mesh for the distributed quantization engine.
+
+    Quantization is pure model parallelism (column shards of each weight),
+    so ``quantize_model(..., mesh=make_model_mesh())`` puts every local
+    device on the model axis.  ``n_model`` defaults to all local devices."""
+    n = n_model or len(jax.devices())
+    return jax.make_mesh((n,), ("model",))
+
+
 def data_axes_of(mesh) -> tuple:
     return tuple(ax for ax in mesh.axis_names if ax in ("pod", "data"))
 

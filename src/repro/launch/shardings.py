@@ -8,6 +8,12 @@ MoE expert stacks shard the EXPERT dim over "model" (EP) with no intra-
 expert TP.  Quantized leaves (qcodes/scales/zeros/absmax) follow their
 weight's orientation; LoRA splits so that the TP-sharded side matches the
 base ("col": lora_b output-sharded; "row": lora_a input-sharded).
+
+The distributed quantization engine produces its bucket outputs already
+column-sharded over "model" (`repro.core.batched.bucket_out_specs`, re-
+exported here as :func:`quant_bucket_specs`): "col"-oriented layers can be
+consumed in place, "row"/"rep" layers are re-laid-out by the usual
+``device_put`` against :func:`param_specs` at load time.
 """
 from __future__ import annotations
 
@@ -166,6 +172,18 @@ def _bdiv(b: int, mesh, dp) -> bool:
             return False
         total *= mesh.shape[ax]
     return b % total == 0
+
+
+def quant_bucket_specs(method: str, axis: str = "model") -> dict:
+    """PartitionSpecs of one batched-quantization bucket's stacked leaves
+    (leading dim L), as produced by the distributed engine.
+
+    Launch-level re-export of ``repro.core.batched.bucket_out_specs`` so
+    deployment code can build `NamedSharding`s for bucket outputs (e.g. to
+    keep them resident for serving) without importing the engine
+    internals."""
+    from repro.core.batched import bucket_out_specs
+    return bucket_out_specs(method, axis)
 
 
 def to_named(specs_tree, mesh):

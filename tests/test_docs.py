@@ -1,0 +1,17 @@
+"""Docs stay runnable: tools/check_docs.py (markdown doctests + relative
+link check + engine docstring doctests) must pass."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_check_docs_passes():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "check_docs.py")],
+        capture_output=True, text=True, timeout=300, cwd=REPO)
+    assert proc.returncode == 0, (
+        f"doc check failed\n--- stdout ---\n{proc.stdout}\n"
+        f"--- stderr ---\n{proc.stderr}")
+    assert "docs OK" in proc.stdout

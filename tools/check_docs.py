@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Docs checker: keep README/docs code snippets runnable and links live.
+
+Two passes over README.md and docs/*.md:
+
+1. **Doctests** — every fenced ```python block containing ``>>>`` lines is
+   run through :mod:`doctest` (with ``src/`` on ``sys.path``), plus the
+   docstring doctests of the engine modules that advertise them.
+2. **Links** — every relative markdown link target must exist on disk
+   (http(s)/mailto and pure-anchor links are skipped).
+
+Wired into the verify skill (`.claude/skills/verify/SKILL.md`) and run by
+``tests/test_docs.py``:
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+DOCTEST_MODULES = ["repro.core.batched"]
+
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_doctests(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text()
+    for i, block in enumerate(_FENCE.findall(text)):
+        if ">>>" not in block:
+            continue  # illustrative snippet, not a doctest
+        parser = doctest.DocTestParser()
+        test = parser.get_doctest(block, {}, f"{path.name}[{i}]",
+                                  str(path), 0)
+        out = []
+        runner = doctest.DocTestRunner(verbose=False)
+        runner.run(test, out=out.append)
+        if runner.failures:
+            errors.append(f"{path}: doctest block {i} failed:\n"
+                          + "".join(out))
+    return errors
+
+
+def check_module_doctests(modname: str) -> list[str]:
+    import importlib
+    mod = importlib.import_module(modname)
+    res = doctest.testmod(mod, verbose=False)
+    if res.failed:
+        return [f"{modname}: {res.failed} docstring doctest(s) failed"]
+    return []
+
+
+def check_links(path: Path) -> list[str]:
+    errors = []
+    for target in _LINK.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#")[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for f in DOC_FILES:
+        if not f.exists():
+            errors.append(f"missing doc file: {f}")
+            continue
+        errors += check_doctests(f)
+        errors += check_links(f)
+    for m in DOCTEST_MODULES:
+        errors += check_module_doctests(m)
+    if errors:
+        print("\n".join(errors))
+        print(f"FAILED: {len(errors)} doc problem(s)")
+        return 1
+    n_files = len(DOC_FILES)
+    print(f"docs OK: {n_files} files, doctests + links clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
