@@ -16,7 +16,10 @@ The ``sharded_rows`` section measures the *distributed* batched engine: on
 a multi-device mesh (a subprocess with fake CPU devices here), a bucket of
 N layers run as ONE fused shard_map(vmap) program
 (``run_bucket_sharded``) vs the per-layer sharded status quo (a Python
-loop of ``optq_quantize_sharded`` + ``cloq_init_sharded`` dispatches)."""
+loop of ``optq_quantize_sharded`` + ``cloq_init_sharded`` dispatches).
+``loftq_sharded_row`` covers the method that used to force the replicated
+fallback: the fused Gram-trick sharded LoftQ bucket vs the replicated
+bucket executable that was its only option before."""
 from __future__ import annotations
 
 import json
@@ -137,9 +140,54 @@ print("RESULT " + json.dumps({{
 """
 
 
+# LoftQ used to be the replicated-fallback method; now it shards via the
+# Gram trick (loftq.svd_lowrank_topr).  Its baseline is therefore the
+# replicated bucket executable, not a per-layer sharded loop.
+_LOFTQ_SHARDED_SNIPPET = """
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.batched import LayerTask, plan_buckets, quantize_layer_batch
+from repro.models.modules import QSpec
+
+m, n, L, reps = {m}, {n}, {L}, {reps}
+rng = np.random.default_rng(0)
+mesh = jax.make_mesh((len(jax.devices()),), ("model",))
+qspec = QSpec(bits=2, group_size=64, rank=16)
+Ws = [jnp.asarray(rng.normal(size=(m, n)), jnp.float32) for _ in range(L)]
+keys = jax.random.split(jax.random.PRNGKey(0), L)
+tasks = [LayerTask(f"l{{i}}", None, Wi, None, ki)
+         for i, (Wi, ki) in enumerate(zip(Ws, keys))]
+spec = next(iter(plan_buckets(tasks, qspec, "loftq", mesh=mesh)))
+assert spec.n_shards == len(jax.devices()), spec.n_shards
+
+def replicated():
+    outs = quantize_layer_batch(tasks, qspec, "loftq")
+    jax.block_until_ready(outs[-1]["lora_a"])
+
+def fused():
+    outs = quantize_layer_batch(tasks, qspec, "loftq", mesh=mesh)
+    jax.block_until_ready(outs[-1]["lora_a"])
+
+replicated(); fused()                      # compile before timing
+def best(f):
+    ts = []
+    for _ in range(reps):
+        t0 = time.time(); f(); ts.append(time.time() - t0)
+    return min(ts)
+t_rep, t_fused = best(replicated), best(fused)
+print("RESULT " + json.dumps({{
+    "method": "loftq", "m": m, "n": n, "n_layers": L,
+    "n_devices": len(jax.devices()), "n_shards": spec.n_shards,
+    "replicated_batched_s": round(t_rep, 3),
+    "sharded_batched_s": round(t_fused, 3),
+    "speedup": round(t_rep / t_fused, 2)}}))
+"""
+
+
 def _sharded_bucket_row(m: int, n: int, n_layers: int,
-                        n_devices: int = 2) -> dict:
-    """Time one fused sharded bucket vs per-layer sharded dispatch in a
+                        n_devices: int = 2,
+                        snippet: str = _SHARDED_SNIPPET) -> dict:
+    """Time one fused sharded bucket vs its status-quo baseline in a
     fresh subprocess with ``n_devices`` fake CPU devices."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
@@ -148,8 +196,8 @@ def _sharded_bucket_row(m: int, n: int, n_layers: int,
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
         env.get("PYTHONPATH", "")
-    code = textwrap.dedent(_SHARDED_SNIPPET).format(m=m, n=n, L=n_layers,
-                                                    reps=REPS)
+    code = textwrap.dedent(snippet).format(m=m, n=n, L=n_layers,
+                                           reps=REPS)
     proc = subprocess.run([sys.executable, "-c", code], env=env,
                           capture_output=True, text=True, timeout=1200)
     if proc.returncode != 0:
@@ -210,10 +258,20 @@ def run() -> dict:
                   f"fused={row['sharded_batched_s']}s "
                   f"({row['speedup']}x)", flush=True)
 
+    lq = _sharded_bucket_row(64, 64, 16, snippet=_LOFTQ_SHARDED_SNIPPET)
+    if "error" in lq:
+        print(f"  loftq sharded bucket: failed {lq['error']}", flush=True)
+    else:
+        print(f"  loftq sharded bucket 64x64 x16 ({lq['n_devices']} dev): "
+              f"replicated={lq['replicated_batched_s']}s "
+              f"fused={lq['sharded_batched_s']}s ({lq['speedup']}x)",
+              flush=True)
+
     out = {"rows": rows,
            "batched_rows": batched_rows,
            "batched_speedup_best": max(r["speedup"] for r in batched_rows),
            "sharded_rows": sharded_rows,
+           "loftq_sharded_row": lq,
            "note": ("paper Table 10: comparable runtimes; CLoQ trades "
                     "LoftQ's 5 SVD iterations for OPTQ+2 SVDs.  batched_s: "
                     "one jit(vmap) dispatch over a bucket of same-shape "

@@ -1,3 +1,5 @@
-from repro.checkpoint.manager import CheckpointManager, restore_tree, save_tree
+from repro.checkpoint.manager import (CheckpointManager, manifest_shardings,
+                                      restore_tree, save_tree)
 
-__all__ = ["CheckpointManager", "restore_tree", "save_tree"]
+__all__ = ["CheckpointManager", "manifest_shardings", "restore_tree",
+           "save_tree"]

@@ -13,7 +13,15 @@ Fault-tolerance properties:
   * elastic restore — leaves are restored as host numpy and re-placed with
     ``jax.device_put(leaf, NamedSharding(new_mesh, spec))``, so a checkpoint
     taken on one mesh restores onto any other mesh whose axes divide the
-    shapes (tested in tests/test_checkpoint.py::test_reshard).
+    shapes (tested in tests/test_checkpoint.py::test_reshard);
+  * bucket-manifest restore — a quantized checkpoint saved with
+    ``save_tree(..., manifest=...)`` (the planner output of
+    ``repro.core.pipeline.quantization_manifest``) carries its bucket
+    layout in ``meta.json``; ``restore_tree(..., mesh=...)`` rebuilds
+    per-leaf NamedShardings for the NEW mesh directly from that manifest
+    (:func:`manifest_shardings`) — shard counts are re-resolved against the
+    target mesh, and neither the planner nor the model config is needed at
+    restore time.
 """
 from __future__ import annotations
 
@@ -30,6 +38,9 @@ from repro.utils import set_path, tree_paths
 
 _BF16_TAG = "__bf16__"
 
+# meta.json key holding the serialized bucket manifest (plan output)
+MANIFEST_KEY = "bucket_manifest"
+
 
 def _to_host(tree) -> dict[str, np.ndarray]:
     flat = tree_paths(tree)
@@ -44,13 +55,21 @@ def _to_host(tree) -> dict[str, np.ndarray]:
 
 
 def save_tree(tree, directory: str, step: int, extra_meta: dict | None = None,
-              background: bool = False) -> threading.Thread | None:
+              background: bool = False,
+              manifest: dict | None = None) -> threading.Thread | None:
     """Atomic write of a pytree snapshot. Returns the writer thread if
-    ``background``."""
+    ``background``.
+
+    ``manifest``: optional bucket manifest
+    (``repro.core.pipeline.quantization_manifest``) serialized into
+    ``meta.json`` so :func:`restore_tree` can rebuild per-bucket shardings
+    on any mesh without re-running the planner."""
     os.makedirs(directory, exist_ok=True)
     host = _to_host(tree)
     meta = {"step": int(step), "time": time.time()}
     meta.update(extra_meta or {})
+    if manifest is not None:
+        meta[MANIFEST_KEY] = manifest
 
     def write():
         tmp = os.path.join(directory, f"tmp.{step}.{os.getpid()}")
@@ -81,10 +100,55 @@ def _list_steps(directory: str) -> list[int]:
     return sorted(steps)
 
 
+def manifest_shardings(manifest: dict, mesh, axis: str | None = None) -> dict:
+    """Per-leaf ``NamedSharding``s of a quantized checkpoint, rebuilt from
+    its bucket manifest for a **new** mesh — no planner, no model config.
+
+    Shard counts are re-resolved against ``mesh``
+    (``repro.core.batched.bucket_shards`` on each bucket's ``(n, method)``
+    — the manifest's saved ``n_shards`` belong to the save-time mesh), so a
+    checkpoint taken on D devices restores column-sharded onto D' devices,
+    with non-divisible buckets falling back to replicated.  Returns a flat
+    ``{dot.path.leaf: NamedSharding}`` dict consumable by
+    :func:`restore_tree`'s ``shardings=``; entries for leaves absent from
+    the tree (e.g. the shared block's relocated adapters) are ignored by
+    the restore."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    from repro.core.batched import bucket_shards, task_leaf_specs
+
+    axis = axis or manifest.get("axis", "model")
+    stacked = set(manifest.get("stacked", ()))
+    out: dict = {}
+    for bucket in manifest["buckets"]:
+        spec = bucket["spec"]
+        k = bucket_shards(spec["n"], spec["method"], mesh, axis)
+        ax = axis if k > 1 else None
+        for task in bucket["tasks"]:
+            lead = 0 if task["expert"] is None else 1
+            # the eager per-layer path, plus its scan-stacked alias
+            # ("blocks.3.attn.q" -> "blocks.attn.q" with one more lead dim)
+            # when the saved layout stacks that container over layers
+            targets = [(task["path"], lead)]
+            segs = task["path"].split(".")
+            if segs[0] in stacked and len(segs) > 1 and segs[1].isdigit():
+                targets.append((".".join([segs[0]] + segs[2:]), lead + 1))
+            for path, ld in targets:
+                for leaf, sp in task_leaf_specs(spec["method"], ax,
+                                                lead=ld).items():
+                    out[f"{path}.{leaf}"] = NamedSharding(mesh, P(*sp))
+    return out
+
+
 def restore_tree(directory: str, step: int | None = None, *,
-                 shardings=None):
+                 shardings=None, mesh=None, axis: str | None = None):
     """Load (tree, meta). ``shardings``: optional pytree of NamedSharding to
-    re-place leaves onto a (possibly different) mesh — elastic restart."""
+    re-place leaves onto a (possibly different) mesh — elastic restart.
+
+    ``mesh`` (with no explicit ``shardings``): rebuild the quantized
+    leaves' shardings for that mesh directly from the checkpoint's bucket
+    manifest (saved via ``save_tree(manifest=...)``) — the planner is
+    skipped entirely.  A checkpoint without a manifest restores unsharded."""
     steps = _list_steps(directory)
     if not steps:
         raise FileNotFoundError(f"no checkpoints under {directory}")
@@ -93,6 +157,8 @@ def restore_tree(directory: str, step: int | None = None, *,
     data = np.load(os.path.join(path, "arrays.npz"))
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
+    if shardings is None and mesh is not None and MANIFEST_KEY in meta:
+        shardings = manifest_shardings(meta[MANIFEST_KEY], mesh, axis)
     tree: dict = {}
     for key in data.files:
         arr = data[key]
@@ -125,12 +191,13 @@ class CheckpointManager:
             self._thread = None
 
     def maybe_save(self, step: int, tree, extra_meta: dict | None = None,
-                   force: bool = False) -> bool:
+                   force: bool = False, manifest: dict | None = None) -> bool:
         if not force and (self.every <= 0 or step % self.every != 0):
             return False
         self.wait()
         self._thread = save_tree(tree, self.directory, step, extra_meta,
-                                 background=self.async_write)
+                                 background=self.async_write,
+                                 manifest=manifest)
         self._gc()
         return True
 
@@ -138,9 +205,11 @@ class CheckpointManager:
         steps = _list_steps(self.directory)
         return steps[-1] if steps else None
 
-    def restore(self, step: int | None = None, shardings=None):
+    def restore(self, step: int | None = None, shardings=None, mesh=None,
+                axis: str | None = None):
         self.wait()
-        return restore_tree(self.directory, step, shardings=shardings)
+        return restore_tree(self.directory, step, shardings=shardings,
+                            mesh=mesh, axis=axis)
 
     def _gc(self) -> None:
         steps = _list_steps(self.directory)

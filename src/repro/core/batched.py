@@ -26,14 +26,15 @@ This module batches it:
 
 3.  **Sharding** (:func:`run_bucket_sharded`): on a multi-device mesh the
     planner assigns each bucket ``n_shards`` column shards over the
-    ``model`` axis (falling back to ``1`` = replicated when ``n`` doesn't
-    divide the axis, or the method needs a full-width SVD).  The bucket
-    then runs as **one** ``shard_map`` whose body vmaps the same per-layer
-    core over the local ``(L, m, n_local)`` shard — sharding composed
-    *inside* the vmapped bucket, so an L-layer bucket on D devices costs a
-    single dispatch instead of L per-layer sharded dispatches.  The only
-    communication is CLoQ's Gram-trick psum: one ``(L, m, m)`` all-reduce
-    per bucket.
+    ``model`` axis (falling back to ``1`` = replicated only when ``n``
+    doesn't divide the axis).  The bucket then runs as **one** ``shard_map``
+    whose body vmaps the same per-layer core over the local
+    ``(L, m, n_local)`` shard — sharding composed *inside* the vmapped
+    bucket, so an L-layer bucket on D devices costs a single dispatch
+    instead of L per-layer sharded dispatches.  The only communication is
+    the Gram-trick psum: one ``(L, m, m)`` all-reduce per bucket for CLoQ,
+    one per AltMin round for LoftQ (``loftq.svd_lowrank_topr``) — every
+    method, LoftQ included, rides the fused sharded path.
 
 4.  **Streaming** (:func:`quantize_layer_batch` with ``stream=True``):
     bucket execution is double-buffered — host stacking of bucket ``k+1``
@@ -67,17 +68,18 @@ Array = jax.Array
 # methods whose base quantization consumes a calibration Gram
 GRAM_METHODS = ("cloq", "gptq")
 
-# methods whose whole stack is column-local (or Gram-trick exact) and can
-# run column-sharded; loftq's AltMin needs the full-width SVD of (W - Q)
-# and stays replicated.
-SHARDABLE_METHODS = ("cloq", "gptq", "rtn", "qlora")
+# methods the planner must keep replicated on a mesh.  Empty: every method's
+# stack is column-local given the replicated Gram, with the two full-width
+# SVDs (CLoQ's R dW, LoftQ's per-round W - Q) recovered exactly from column
+# shards via the Gram trick (cloq.cloq_lowrank_local, loftq.svd_lowrank_topr).
+_REPLICATED_METHODS: tuple[str, ...] = ()
 
 
 def bucket_shards(n: int, method: str, mesh=None,
                   axis: str = "model") -> int:
     """Column-shard count the planner assigns a bucket: the ``axis`` size of
-    ``mesh`` when the method supports column sharding and ``n`` divides it,
-    else ``1`` (replicated fallback).
+    ``mesh`` when ``n`` divides it (and the method is not forced replicated
+    — currently none is), else ``1`` (replicated fallback).
 
     >>> bucket_shards(48, "cloq", mesh=None)
     1
@@ -85,7 +87,7 @@ def bucket_shards(n: int, method: str, mesh=None,
     if mesh is None or axis not in getattr(mesh, "axis_names", ()):
         return 1
     k = int(mesh.shape[axis])
-    if k <= 1 or method not in SHARDABLE_METHODS or n % k != 0:
+    if k <= 1 or method in _REPLICATED_METHODS or n % k != 0:
         return 1
     return k
 
@@ -172,8 +174,9 @@ def quantize_single(W: Array, H: Array | None, key: Array,
               agree on every device.
         spec: static bucket signature (shapes, method, grid, gates).
         axis: mesh axis name when running as the shard-local body of
-              :func:`run_bucket_sharded`; selects CLoQ's Gram-trick solve
-              (``cloq_lowrank_local``, one psum) over the dense SVD.  All
+              :func:`run_bucket_sharded`; selects the Gram-trick solves
+              over the dense SVDs (CLoQ: ``cloq_lowrank_local``, one psum;
+              LoftQ: ``svd_lowrank_topr``, one psum per AltMin round).  All
               other ops are per-column and need no communication.
 
     Returns a dict of leaves; column-dimension leaves (``qcodes``,
@@ -207,7 +210,7 @@ def quantize_single(W: Array, H: Array | None, key: Array,
         return {"qcodes": pack_codes(Qc, spec.bits), "scales": s, "zeros": z,
                 "lora_a": A, "lora_b": B}
     if spec.method == "loftq":
-        Qd, A, B, qstate = loftq_init(W, qcfg, spec.rank, iters=5)
+        Qd, A, B, qstate = loftq_init(W, qcfg, spec.rank, iters=5, axis=axis)
         codes, s, z = qstate
         return {"qcodes": pack_codes(codes, spec.bits), "scales": s,
                 "zeros": z, "lora_a": A, "lora_b": B}
@@ -249,22 +252,42 @@ def run_bucket(Ws: Array, Hs: Array | None, keys: Array,
         lambda W, H, k: quantize_single(W, H, k, spec))(Ws, Hs, keys)
 
 
-def bucket_out_specs(method: str, axis: str = "model"):
-    """PartitionSpecs of one sharded bucket's output leaves (leading dim L).
+def task_leaf_specs(method: str, axis: str | None = "model",
+                    lead: int = 0) -> dict:
+    """PartitionSpecs of ONE task's (unstacked) output leaves.
 
     Column-dimension leaves (``qcodes``/``scales``/``zeros``/``absmax``)
-    shard their last dim over ``axis``; ``lora_b`` (L, n, r) shards its
-    middle (column) dim; ``lora_a`` (L, m, r) is replicated — CLoQ's
-    Gram-trick psum (and the replicated PRNG key for the random-init
-    baselines) makes it identical on every device."""
+    shard their last dim over ``axis``; ``lora_b`` (n, r) shards its column
+    dim; ``lora_a`` (m, r) is replicated — the Gram-trick psum (and the
+    replicated PRNG key for the random-init baselines) makes it identical
+    on every device.  ``axis=None`` yields the fully-replicated fallback
+    layout; ``lead`` prepends that many unsharded dims (stacked MoE expert
+    leaves in the param tree carry a leading ``E``).
+
+    This is the layout source of truth: :func:`bucket_out_specs` stacks it
+    with the bucket dim ``L``, and checkpoint restore rebuilds per-leaf
+    shardings from a saved bucket manifest with it
+    (:func:`repro.checkpoint.manager.manifest_shardings`)."""
     from jax.sharding import PartitionSpec as P
-    col = P(None, None, axis)
-    rep = P(None, None, None)
+    pre = (None,) * lead
+    col = P(*pre, None, axis)
+    out = {"qcodes": col, "lora_a": P(*pre, None, None),
+           "lora_b": P(*pre, axis, None)}
     if method == "qlora":
-        return {"qcodes": col, "absmax": col,
-                "lora_a": rep, "lora_b": P(None, axis, None)}
-    return {"qcodes": col, "scales": col, "zeros": col,
-            "lora_a": rep, "lora_b": P(None, axis, None)}
+        out["absmax"] = col
+    else:
+        out["scales"] = col
+        out["zeros"] = col
+    return out
+
+
+def bucket_out_specs(method: str, axis: str = "model"):
+    """PartitionSpecs of one sharded bucket's output leaves: the per-task
+    layout of :func:`task_leaf_specs` under an unsharded leading bucket
+    dim ``L``."""
+    from jax.sharding import PartitionSpec as P
+    return {k: P(None, *sp)
+            for k, sp in task_leaf_specs(method, axis).items()}
 
 
 @lru_cache(maxsize=64)
@@ -365,9 +388,8 @@ def plan_buckets(tasks: list[LayerTask], qspec, method: str,
                 ``rtn``).
         base:   optional :class:`QuantConfig` overriding sweep defaults.
         mesh:   optional ``jax.sharding.Mesh``; buckets whose column count
-                divides ``mesh.shape[axis]`` (and whose method is in
-                :data:`SHARDABLE_METHODS`) get ``n_shards > 1`` and run via
-                :func:`run_bucket_sharded`; the rest fall back to the
+                divides ``mesh.shape[axis]`` get ``n_shards > 1`` and run
+                via :func:`run_bucket_sharded`; the rest fall back to the
                 replicated :func:`run_bucket`.
         axis:   mesh axis name for column sharding.
 
@@ -384,6 +406,28 @@ def plan_buckets(tasks: list[LayerTask], qspec, method: str,
                          mesh=mesh, axis=axis)
         buckets.setdefault(spec, []).append(i)
     return buckets
+
+
+def plan_manifest(tasks: list[LayerTask],
+                  buckets: dict[BucketSpec, list[int]],
+                  axis: str = "model") -> dict:
+    """Serialize one planner run to a JSON-able **bucket manifest**: every
+    bucket's static spec (shard count included) plus the task -> bucket
+    assignment with each task's param-tree path and expert index.
+
+    Saved alongside checkpoints (``checkpoint.manager.save_tree(...,
+    manifest=...)``) so a resharded restore can rebuild per-bucket
+    shardings directly from the file — no model config, no planner
+    (:func:`repro.checkpoint.manager.manifest_shardings`)."""
+    return {
+        "version": 1,
+        "axis": axis,
+        "buckets": [
+            {"spec": dataclasses.asdict(spec),
+             "tasks": [{"path": tasks[i].path, "expert": tasks[i].expert}
+                       for i in idxs]}
+            for spec, idxs in buckets.items()],
+    }
 
 
 def _stage_bucket(tasks: list[LayerTask], idxs: list[int],

@@ -132,17 +132,58 @@ def cloq_lowrank_local(R: Array, Rinv: Array, dW_local: Array, rank: int,
     stack in one collective).  Uses ``eigh`` of the m x m Gram rather than
     the unsharded path's ``svd(R dW)``: the same subspace to float precision
     (tests compare the ``A B^T`` product, which is the well-defined
-    quantity)."""
+    quantity).  The Gram-trick core is shared with sharded LoftQ
+    (:func:`repro.core.loftq.svd_lowrank_topr`) — this is the ``R != I``
+    instance."""
+    from repro.core.loftq import svd_lowrank_topr
     M_l = R @ dW_local                                  # (m, n_local)
-    G = M_l @ M_l.T                                     # (m, m)
-    if axis is not None:
-        G = jax.lax.psum(G, axis)
-    evals, evecs = jnp.linalg.eigh(G)                   # ascending
-    top = evals[::-1][:rank]
-    U = evecs[:, ::-1][:, :rank]
-    S = jnp.sqrt(jnp.maximum(top, 1e-30))
-    V_l = (M_l.T @ U) / S[None, :]                      # (n_local, r)
+    U, S, V_l = svd_lowrank_topr(M_l, rank, axis)
     return split_factors(Rinv @ U, S, V_l, split)
+
+
+def cloq_site_lora(Hs: Array, dW: Array, rank: int, split: str = "paper",
+                   mesh=None, axis: str = "model"):
+    """Per-site CLoQ adapters of a weight-shared block: one Theorem-3.1
+    solve per call site against the site's own Gram, with the residual
+    ``dW = W - Q`` of the (pooled-Gram) shared base fixed.
+
+    Args:
+        Hs:    (S, m, m) stacked per-site *unregularized* Grams.
+        dW:    (m, n) shared quantization residual.
+        rank:  adapter rank r (static).
+        split: one of :data:`SPLITS` (static).
+        mesh:  optional ``jax.sharding.Mesh``.  Without one, the solve is a
+               plain vmap of :func:`cloq_init` over the site Grams (dense
+               SVD per site).  With one, ``dW`` is column-sharded over
+               ``axis`` and the solve runs as ONE ``shard_map`` whose body
+               vmaps :func:`cloq_lowrank_local` over the sites — the per-
+               site ``gram_root``s are replicated compute and the S Gram
+               psums fuse into a single ``(S, m, m)`` collective.  The
+               caller must ensure ``n`` divides the axis (the engine's
+               planner gate, :func:`repro.core.batched.bucket_shards`).
+        axis:  mesh axis name.
+
+    Returns ``(As (S, m, r), Bs (S, n, r))``; under a mesh ``Bs`` comes
+    back column-sharded and ``As`` replicated."""
+    dW = jnp.asarray(dW, jnp.float32)
+    Hs = jnp.asarray(Hs, jnp.float32)
+    if mesh is None:
+        return jax.vmap(
+            lambda H: cloq_init(regularize_gram(H), dW, rank, split))(Hs)
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    Rs, Rinvs = jax.vmap(lambda H: gram_root(regularize_gram(H)))(Hs)
+
+    def local(Rs_, Rinvs_, dW_l):
+        return jax.vmap(lambda R, Rinv: cloq_lowrank_local(
+            R, Rinv, dW_l, rank, split, axis))(Rs_, Rinvs_)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(None, None, None), P(None, None, None),
+                             P(None, axis)),
+                   out_specs=(P(None, None, None), P(None, axis, None)))
+    return fn(Rs, Rinvs, dW)
 
 
 def cloq_init_sharded(H: Array, dW: Array, rank: int, mesh,

@@ -5,6 +5,14 @@
 AltMin: Q <- quant(W - A B^T);  (A, B) <- SVD_r(W - Q), split as
 A = U_r S_r^{1/2}, B = V_r S_r^{1/2} (LoftQ's choice). Default 5 iterations.
 Supports the uniform INT grid (to compare heads-up with CLoQ) and NF4.
+
+Distributed: the RTN quantization inside each AltMin round is per output
+column, and the SVD of the full-width residual ``W - Q`` is recovered
+exactly from a column shard via the same Gram trick CLoQ's sharded solve
+uses (:func:`svd_lowrank_topr`: ``G = (W-Q)(W-Q)^T`` psummed, ``eigh``
+replicated, ``V`` shard-local) — so :func:`loftq_init` runs column-sharded
+inside the batched engine's ``shard_map`` with one ``(m, m)`` psum per
+AltMin round, and LoftQ no longer forces the replicated bucket fallback.
 """
 from __future__ import annotations
 
@@ -25,11 +33,44 @@ def _rtn_roundtrip(W: Array, cfg: QuantConfig):
     return dequantize_int(codes, s, z, cfg.group_size), (codes, s, z)
 
 
-def loftq_init(W: Array, cfg: QuantConfig, rank: int, iters: int = 5):
+def svd_lowrank_topr(dW_local: Array, rank: int, axis: str | None = None):
+    """Top-``rank`` SVD factors of the full-width ``dW`` from a column shard.
+
+    Same Gram trick as :func:`repro.core.cloq.cloq_lowrank_local` with
+    ``R = I``:
+
+        G = dW dW^T          -- psum over ``axis`` when given (m x m)
+        eigh(G) -> U, S^2    -- replicated across shards
+        V_local = dW_l^T U S^{-1}   -- shard-local
+
+    Returns ``(U (m, r), S (r,), V_local (n_local, r))`` with ``U``/``S``
+    identical on every shard.  Safe under both ``shard_map`` (the psum is
+    the only communication) and ``vmap`` (the batched engine maps it over a
+    stacked ``(L, m, n_local)`` bucket — the psum reduces an ``(L, m, m)``
+    stack in one collective)."""
+    G = dW_local @ dW_local.T
+    if axis is not None:
+        G = jax.lax.psum(G, axis)
+    evals, evecs = jnp.linalg.eigh(G)                   # ascending
+    top = evals[::-1][:rank]
+    U = evecs[:, ::-1][:, :rank]
+    S = jnp.sqrt(jnp.maximum(top, 1e-30))
+    V_l = (dW_local.T @ U) / S[None, :]                 # (n_local, r)
+    return U, S, V_l
+
+
+def loftq_init(W: Array, cfg: QuantConfig, rank: int, iters: int = 5,
+               axis: str | None = None):
     """Returns (Q_dequant, A, B, qstate) after ``iters`` AltMin rounds.
 
     Vmap-safe: the AltMin loop is a static Python unroll of traced ops, so
-    the batched engine maps it across a stacked ``(L, m, n)`` bucket."""
+    the batched engine maps it across a stacked ``(L, m, n)`` bucket.
+
+    With ``axis`` set, ``W`` is a column shard inside a ``shard_map`` body:
+    the RTN round-trip is already per-column, and the rank-r factors of the
+    full-width ``W - Q`` come from :func:`svd_lowrank_topr` — one
+    ``(m, m)`` psum per AltMin round.  ``A`` comes back replicated, ``B``
+    and ``qstate`` cover the local columns."""
     W = jnp.asarray(W, jnp.float32)
     m, n = W.shape
     A = jnp.zeros((m, rank), jnp.float32)
@@ -37,10 +78,14 @@ def loftq_init(W: Array, cfg: QuantConfig, rank: int, iters: int = 5):
     Qd, qstate = _rtn_roundtrip(W, cfg)
     for _ in range(iters):
         Qd, qstate = _rtn_roundtrip(W - A @ B.T, cfg)
-        U, S, Vt = jnp.linalg.svd(W - Qd, full_matrices=False)
-        rt = jnp.sqrt(S[:rank])
-        A = U[:, :rank] * rt[None, :]
-        B = Vt[:rank, :].T * rt[None, :]
+        if axis is None:
+            U_f, S_f, Vt = jnp.linalg.svd(W - Qd, full_matrices=False)
+            U, S, V = U_f[:, :rank], S_f[:rank], Vt[:rank, :].T
+        else:
+            U, S, V = svd_lowrank_topr(W - Qd, rank, axis)
+        rt = jnp.sqrt(S)
+        A = U * rt[None, :]
+        B = V * rt[None, :]
     return Qd, A, B, qstate
 
 

@@ -52,8 +52,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batched import LayerTask, magr_alpha, quantize_layer_batch
-from repro.core.cloq import cloq_init, regularize_gram
+from repro.core.batched import (GRAM_METHODS, LayerTask, bucket_shards,
+                                magr_alpha, plan_buckets, plan_manifest,
+                                quantize_layer_batch)
+from repro.core.cloq import cloq_init, cloq_site_lora, regularize_gram
 from repro.core.loftq import loftq_init, qlora_init
 from repro.core.magr import magr_preprocess
 from repro.core.optq import optq_quantize
@@ -354,9 +356,12 @@ def _quantize_model_batched(eparams: dict, store: GramStore, qspec: QSpec,
                     dW = W - Qd
                     Hs = jnp.stack([jnp.asarray(store.grams[sp], jnp.float32)
                                     for sp in site_paths])
-                    As, Bs = jax.vmap(
-                        lambda Hsite: cloq_init(regularize_gram(Hsite), dW,
-                                                qspec.rank, qspec.split))(Hs)
+                    # same plan-time gate as the bucket planner: shard the
+                    # per-site solves over the mesh when n divides the axis
+                    site_mesh = mesh if bucket_shards(
+                        dW.shape[1], method, mesh, shard_axis) > 1 else None
+                    As, Bs = cloq_site_lora(Hs, dW, qspec.rank, qspec.split,
+                                            mesh=site_mesh, axis=shard_axis)
                 else:
                     As = jnp.stack([A0] * len(site_paths))
                     Bs = jnp.stack([B0] * len(site_paths))
@@ -410,8 +415,72 @@ def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
 
 
 # ---------------------------------------------------------------------------
-# Abstract quantized parameter shapes (dry-run: no allocation, no compute).
+# Abstract quantized parameter shapes + bucket manifest (dry-run: no
+# allocation, no compute, no calibration).
 # ---------------------------------------------------------------------------
+
+
+def _abstract_eager_shapes(cfg: ModelConfig):
+    """ShapeDtypeStruct tree of the dense eager params (no allocation)."""
+    from repro.models.transformer import init_params
+    eager_cfg = dataclasses.replace(cfg, scan_layers=False)
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0),
+                                                eager_cfg))
+    return jax.tree.map(lambda s: s, shapes)
+
+
+def _abstract_tasks(eshapes: dict, method: str) -> list[LayerTask]:
+    """Flatten quantization sites of an abstract shape tree into
+    ShapeDtypeStruct-backed :class:`LayerTask`s — same site discovery and
+    ordering as :func:`_gather_tasks`, so planning them reproduces the real
+    engine's buckets exactly (the planner only reads ``W.shape`` and
+    ``H is not None``)."""
+    SDS = jax.ShapeDtypeStruct
+    tasks: list[LayerTask] = []
+    for lin_path in quantizable_linear_paths(eshapes):
+        W = get_path(eshapes, lin_path)["w"]
+        if W.ndim == 3:
+            E, m, n = W.shape
+            for e in range(E):
+                tasks.append(LayerTask(
+                    lin_path, e, SDS((m, n), jnp.float32),
+                    SDS((m, m), jnp.float32)
+                    if method in GRAM_METHODS else None, None))
+        else:
+            m, n = W.shape
+            tasks.append(LayerTask(
+                lin_path, None, SDS((m, n), jnp.float32),
+                SDS((m, m), jnp.float32)
+                if method in GRAM_METHODS else None, None))
+    return tasks
+
+
+def quantization_manifest(cfg: ModelConfig, method: str = "cloq",
+                          qspec: QSpec | None = None, *, mesh=None,
+                          shard_axis: str = "model",
+                          _eshapes: dict | None = None) -> dict:
+    """Bucket manifest of a ``quantize_model`` run, built from abstract
+    shapes alone — no calibration, no weights, no device compute.
+
+    Runs the very same planner (:func:`repro.core.batched.plan_buckets`)
+    over ShapeDtypeStruct tasks, so the returned manifest (bucket specs
+    with shard counts, task -> bucket assignment, param-tree paths) is
+    exactly the plan the batched engine executes for this
+    ``(cfg, method, qspec, mesh)``.  Hand it to
+    ``checkpoint.manager.save_tree(..., manifest=...)`` so later restores
+    can rebuild per-bucket shardings without re-running the planner
+    (``checkpoint.manager.manifest_shardings``)."""
+    qspec = qspec or cfg.quant or QSpec()
+    eshapes = _abstract_eager_shapes(cfg) if _eshapes is None else _eshapes
+    tasks = _abstract_tasks(eshapes, method)
+    buckets = plan_buckets(tasks, qspec, method, mesh=mesh, axis=shard_axis)
+    manifest = plan_manifest(tasks, buckets, axis=shard_axis)
+    if cfg.scan_layers:
+        # the saved param layout stacks these containers over layers: record
+        # them so manifest_shardings can alias each eager task path to its
+        # scan-stacked form (one extra unsharded leading dim)
+        manifest["stacked"] = [k for k in _STACK_KEYS if k in eshapes]
+    return manifest
 
 
 def _quant_leaf_shapes(m: int, n: int, qspec: QSpec, dtype,
@@ -428,16 +497,24 @@ def _quant_leaf_shapes(m: int, n: int, qspec: QSpec, dtype,
     }
 
 
-def quantized_param_shapes(cfg: ModelConfig):
+def quantized_param_shapes(cfg: ModelConfig, *, method: str = "cloq",
+                           mesh=None, shard_axis: str = "model",
+                           with_manifest: bool = False):
     """ShapeDtypeStruct tree of the post-quantization param layout, built
-    without running calibration or allocating anything."""
-    from repro.models.transformer import init_params
+    without running calibration or allocating anything.
+
+    With ``with_manifest=True``, also returns the bucket manifest of the
+    plan the batched engine would execute for ``(cfg, method, mesh)`` —
+    ``(shapes, manifest)`` — i.e. :func:`quantization_manifest` evaluated
+    on the same abstract shapes, ready to be saved next to a checkpoint of
+    this layout."""
     qspec = cfg.quant
     assert qspec is not None, "cfg.quant must be set"
-    eager_cfg = dataclasses.replace(cfg, scan_layers=False)
-    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0),
-                                                eager_cfg))
-    shapes = jax.tree.map(lambda s: s, shapes)
+    shapes = _abstract_eager_shapes(cfg)
+    manifest = (quantization_manifest(cfg, method, qspec, mesh=mesh,
+                                      shard_axis=shard_axis,
+                                      _eshapes=shapes)
+                if with_manifest else None)
     for lin_path in quantizable_linear_paths(shapes):
         lin = dict(get_path(shapes, lin_path))
         W = lin.pop("w")
@@ -460,4 +537,6 @@ def quantized_param_shapes(cfg: ModelConfig):
             if key in shapes:
                 per_layer = shapes[key]["0"]
                 shapes[key] = stack_shapes(per_layer, getattr(cfg, nattr))
+    if with_manifest:
+        return shapes, manifest
     return shapes

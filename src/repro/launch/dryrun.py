@@ -259,6 +259,9 @@ def lower_cell(arch: str, cell: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        # newer jax returns one properties dict per program executable
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     colls = collective_summary(hlo)
 

@@ -186,6 +186,19 @@ def quant_bucket_specs(method: str, axis: str = "model") -> dict:
     return bucket_out_specs(method, axis)
 
 
+def quant_task_specs(method: str, axis: str | None = "model",
+                     lead: int = 0) -> dict:
+    """PartitionSpecs of ONE quantized layer's (unstacked) leaves — the
+    per-task layout the engine's bucket manifest records.
+
+    Launch-level re-export of ``repro.core.batched.task_leaf_specs``;
+    ``repro.checkpoint.manager.manifest_shardings`` applies it per manifest
+    entry to rebuild a full checkpoint's shardings on a new mesh without
+    the planner."""
+    from repro.core.batched import task_leaf_specs
+    return task_leaf_specs(method, axis, lead=lead)
+
+
 def to_named(specs_tree, mesh):
     return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs_tree,
                         is_leaf=lambda x: isinstance(x, P))

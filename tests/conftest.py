@@ -6,3 +6,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # Tests run on the single real CPU device.  Multi-device tests spawn
 # subprocesses with XLA_FLAGS (see tests/util.py) so the main process never
 # locks a fake device count.
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidevice: spawns subprocesses with fake XLA devices (slow, "
+        "needs spare cores); deselect on constrained runners with "
+        '-m "not multidevice"')

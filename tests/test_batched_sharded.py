@@ -2,62 +2,40 @@
 vmapped bucket (2 fake CPU devices, subprocess-isolated), the planner's
 replicated fallback for non-divisible column counts, the stacked-MoE bucket
 at model level, and streaming-order invariance of the bucket executor."""
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.batched import bucket_shards, make_spec
 from repro.models.modules import QSpec
-from tests.util import run_with_devices
+from tests.util import parity_prelude, run_with_devices
 
-# Self-contained parity helpers, inlined into each subprocess (the
-# subprocess only sees PYTHONPATH=src, not the tests package).
-_PARITY_HELPERS = """
-    import jax, jax.numpy as jnp, numpy as np
-
-    def rel_fro(a, b):
-        a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
-        return float(np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-12))
-
-    def assert_leaves_close(got, want, flip_budget=0.005, rel=1e-3,
-                            lora_rel=5e-3):
-        # Different compiled programs (sharded vs local): codes equal up to
-        # a tiny flip fraction, floats close in relative Frobenius norm,
-        # (lora_a, lora_b) compared through their product A B^T (the
-        # factorization is only unique up to degenerate-subspace rotation).
-        assert set(got) == set(want), (set(got), set(want))
-        if "lora_a" in want:
-            pg = np.asarray(got["lora_a"], np.float64) @ \\
-                np.swapaxes(np.asarray(got["lora_b"], np.float64), -1, -2)
-            pw = np.asarray(want["lora_a"], np.float64) @ \\
-                np.swapaxes(np.asarray(want["lora_b"], np.float64), -1, -2)
-            assert rel_fro(pg, pw) <= lora_rel, ("lora", rel_fro(pg, pw))
-        for k in want:
-            if k in ("lora_a", "lora_b"):
-                continue
-            g, w = np.asarray(got[k]), np.asarray(want[k])
-            assert g.shape == w.shape, (k, g.shape, w.shape)
-            if g.dtype == np.uint8:
-                assert float(np.mean(g != w)) <= flip_budget, k
-            else:
-                assert rel_fro(g, w) <= rel, (k, rel_fro(g, w))
-"""
+# Parity helpers (tests/util.py), inlined into each subprocess (which only
+# sees PYTHONPATH=src, not the tests package), plus the jax imports the
+# snippets use.
+_PARITY_HELPERS = "import jax, jax.numpy as jnp\n" + parity_prelude()
 
 
 def test_bucket_shards_plan_rules():
-    """Plan-time sharding decision: needs a mesh with the axis, a method
-    whose stack is column-local, and a divisible column count."""
+    """Plan-time sharding decision: needs a mesh with the axis and a
+    divisible column count (no method is forced replicated anymore)."""
     assert bucket_shards(48, "cloq", mesh=None) == 1
+    assert bucket_shards(48, "loftq", mesh=None) == 1
     qspec = QSpec(bits=2, group_size=16, rank=4)
     spec = make_spec(32, 48, qspec, "cloq", has_gram=True)   # no mesh
     assert spec.n_shards == 1
 
 
+@pytest.mark.multidevice
 def test_sharded_bucket_parity_and_fallback():
     """One fused shard_map(vmap) bucket == the per-layer oracle, for every
-    shardable method; a non-divisible column count falls back to the
-    replicated executable (n_shards == 1) with identical results."""
-    run_with_devices(_PARITY_HELPERS + """
+    method (loftq now rides the Gram-trick sharded path too); a
+    non-divisible column count falls back to the replicated executable
+    (n_shards == 1) with identical results."""
+    run_with_devices(_PARITY_HELPERS + textwrap.dedent("""
         from repro.core.batched import (LayerTask, plan_buckets,
                                         quantize_layer_batch)
         from repro.core.pipeline import _quantize_one
@@ -78,7 +56,7 @@ def test_sharded_bucket_parity_and_fallback():
             return [LayerTask(f"l{i}", None, W, H, k)
                     for i, (W, H, k) in enumerate(zip(Ws, Hs, ks))]
 
-        for method in ("cloq", "gptq", "rtn", "qlora"):
+        for method in ("cloq", "gptq", "rtn", "qlora", "loftq"):
             tasks = make_tasks(48)
             spec = next(iter(plan_buckets(tasks, qspec, method, mesh=mesh)))
             assert spec.n_shards == 2, (method, spec.n_shards)
@@ -90,11 +68,6 @@ def test_sharded_bucket_parity_and_fallback():
                 assert_leaves_close(g, want)
             print(method, "sharded parity ok")
 
-        # loftq needs the full-width SVD: planner must keep it replicated
-        tasks = make_tasks(48)
-        spec = next(iter(plan_buckets(tasks, qspec, "loftq", mesh=mesh)))
-        assert spec.n_shards == 1
-
         # non-divisible n: replicated fallback, same leaves as no-mesh run
         tasks = make_tasks(45)
         spec = next(iter(plan_buckets(tasks, qspec, "cloq", mesh=mesh)))
@@ -105,13 +78,14 @@ def test_sharded_bucket_parity_and_fallback():
             for k in g:
                 assert np.array_equal(np.asarray(g[k]), np.asarray(r[k])), k
         print("fallback ok")
-    """, n_devices=2)
+    """), n_devices=2)
 
 
+@pytest.mark.multidevice
 def test_sharded_model_parity_moe():
     """quantize_model(engine='batched', mesh=...) on a 2-device mesh matches
     the sequential engine, including the stacked-MoE expert bucket."""
-    run_with_devices(_PARITY_HELPERS + """
+    run_with_devices(_PARITY_HELPERS + textwrap.dedent("""
         from repro.core.pipeline import quantize_model
         from repro.data import DataConfig, TokenStream
         from repro.models.modules import QSpec
@@ -149,7 +123,32 @@ def test_sharded_model_parity_moe():
             w = {leaf: fs[f"{lin}.{leaf}"] for leaf in leaves}
             assert_leaves_close(g, w)
         print("sharded model parity (moe) ok")
-    """, n_devices=2)
+    """), n_devices=2)
+
+
+@pytest.mark.multidevice
+def test_sharded_site_lora_matches_unsharded():
+    """cloq_site_lora under a 2-device mesh — one shard_map whose body
+    vmaps cloq_lowrank_local over the call sites — matches the plain
+    vmap-of-cloq_init path through the per-site A B^T products."""
+    run_with_devices(_PARITY_HELPERS + textwrap.dedent("""
+        from repro.core.cloq import cloq_site_lora
+
+        rng = np.random.default_rng(0)
+        m, n, S, r = 32, 48, 5, 8
+        dW = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        Hs = jnp.asarray(np.stack([
+            (lambda X: X.T @ X)(rng.normal(size=(128, m)).astype(np.float32))
+            for _ in range(S)]))
+        mesh = jax.make_mesh((2,), ("model",))
+
+        A0, B0 = cloq_site_lora(Hs, dW, r)
+        A1, B1 = cloq_site_lora(Hs, dW, r, mesh=mesh)
+        assert A1.shape == (S, m, r) and B1.shape == (S, n, r)
+        prod_rel = rel_fro(lora_product(A1, B1), lora_product(A0, B0))
+        assert prod_rel <= 5e-3, prod_rel
+        print("site_lora sharded parity ok:", prod_rel)
+    """), n_devices=2)
 
 
 def test_sequential_engine_rejects_mesh():

@@ -1,0 +1,140 @@
+"""Property-style invariant tests (via the ``tests/_hypothesis_compat``
+shim): quantizer round-trip bounds incl. NF4, ``stable_round`` tie
+determinism across differently-fused programs, and MagR's Newton
+l1-projection against the exact sort/cumsum reference it replaced."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.core.magr import project_l1_ball
+from repro.core.quantizer import (NF4_LEVELS, dequantize_int, dequantize_nf4,
+                                  quantize_int, quantize_nf4, stable_round)
+
+# ---------------------------------------------------------------------------
+# Quantizer round-trip bounds.
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def nf4_case(draw):
+    m, n = draw(st.sampled_from([(16, 8), (64, 32), (32, 48)]))
+    g = draw(st.sampled_from([8, 16, None]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.floats(1e-2, 1e2))
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(m, n)).astype(np.float32) * scale
+    return g, jnp.asarray(w)
+
+
+@settings(max_examples=20, deadline=None)
+@given(nf4_case())
+def test_nf4_roundtrip_bounded_by_half_level_gap(case):
+    """NF4 snaps to the nearest of the 16 levels, so the round-trip error
+    is bounded per group by absmax * (largest level gap)/2."""
+    g, w = case
+    codes, absmax = quantize_nf4(w, g)
+    wd = dequantize_nf4(codes, absmax, g)
+    m, n = w.shape
+    gs = m if g is None else g
+    half_gap = float(np.diff(np.asarray(NF4_LEVELS)).max()) / 2
+    err = jnp.abs(wd - w).reshape(m // gs, gs, n)
+    bound = half_gap * absmax[:, None, :] + 1e-6
+    assert bool(jnp.all(err <= bound))
+
+
+@settings(max_examples=20, deadline=None)
+@given(nf4_case(), st.sampled_from([2, 3, 4, 8]))
+def test_int_roundtrip_idempotent(case, bits):
+    """Dequantized weights are grid points: re-quantizing with the same
+    grids reproduces the identical codes (the fixed-point property the
+    OPTQ sweep's per-row quantization relies on)."""
+    g, w = case
+    codes, s, z = quantize_int(w, bits, g)
+    wd = dequantize_int(codes, s, z, g)
+    codes2, _, _ = quantize_int(wd, bits, g, scales=s, zeros=z)
+    assert bool(jnp.all(codes == codes2))
+
+
+# ---------------------------------------------------------------------------
+# stable_round tie determinism across program variants.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_stable_round_ties_identical_across_fusions(seed):
+    """Exact .5 midpoints — the structural tie mass MagR creates — must
+    round identically in every program variant the engines compile: eager,
+    jit, vmap-fused, and scan-fused.  (jnp.round's half-even would already
+    differ from eager fused programs by 1-ulp jitter; stable_round's
+    nudged boundary removes the decision point entirely.)"""
+    rng = np.random.default_rng(seed)
+    ks = rng.integers(-16, 16, size=(64,))
+    x = jnp.asarray(ks + 0.5, jnp.float32)              # all exact ties
+    mixed = jnp.concatenate([x, jnp.asarray(
+        rng.normal(size=(64,)) * 8, jnp.float32)])
+
+    eager = stable_round(mixed)
+    jitted = jax.jit(stable_round)(mixed)
+    vmapped = jax.jit(jax.vmap(stable_round))(
+        mixed.reshape(8, 16)).reshape(-1)
+
+    def scan_body(c, row):
+        return c, stable_round(row)
+
+    _, scanned = jax.jit(
+        lambda a: jax.lax.scan(scan_body, 0.0, a.reshape(8, 16)))(mixed)
+
+    for variant in (jitted, vmapped, scanned.reshape(-1)):
+        assert bool(jnp.all(variant == eager))
+    # ties broke upward, uniformly
+    assert bool(jnp.all(eager[:64] == jnp.asarray(ks + 1, jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# Newton l1-projection vs the exact sort-based reference.
+# ---------------------------------------------------------------------------
+
+
+def _project_l1_sort(v: np.ndarray, radius: float) -> np.ndarray:
+    """Exact l1-ball projection per column (Duchi et al., 2008): sort
+    |v| descending, find the last index rho where u_rho > (cumsum_rho -
+    radius)/rho, threshold at theta = (cumsum_rho - radius)/rho."""
+    av = np.abs(v)
+    u = -np.sort(-av, axis=0)                           # descending
+    css = np.cumsum(u, axis=0)
+    j = np.arange(1, v.shape[0] + 1)[:, None]
+    cond = u - (css - radius) / j > 0
+    rho = np.maximum(cond.cumsum(0).argmax(0), 0)
+    theta = np.maximum(
+        (css[rho, np.arange(v.shape[1])] - radius) / (rho + 1), 0.0)
+    proj = np.sign(v) * np.maximum(av - theta[None, :], 0.0)
+    return np.where(av.sum(0)[None, :] <= radius, v, proj)
+
+
+@st.composite
+def proj_case(draw):
+    m = draw(st.sampled_from([8, 32, 128]))
+    n = draw(st.sampled_from([4, 16]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    frac = draw(st.floats(0.05, 1.5))   # >1: some columns inside the ball
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(m, n)).astype(np.float32)
+    radius = float(frac * np.abs(v).sum(0).mean())
+    return v, radius
+
+
+@settings(max_examples=20, deadline=None)
+@given(proj_case())
+def test_newton_l1_projection_matches_sort_reference(case):
+    v, radius = case
+    got = np.asarray(project_l1_ball(jnp.asarray(v), radius))
+    want = _project_l1_sort(v, radius)
+    scale = max(radius, float(np.abs(v).max()), 1.0)
+    np.testing.assert_allclose(got, want, atol=5e-5 * scale)
+    # invariants: feasibility (up to float slack) and no-op inside the ball
+    assert np.all(np.abs(got).sum(0) <= radius * (1 + 1e-4) + 1e-5)
+    inside = np.abs(v).sum(0) <= radius
+    np.testing.assert_array_equal(got[:, inside], v[:, inside])
