@@ -34,13 +34,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import RESULTS, FAST
-from repro.core.batched import LayerTask, quantize_layer_batch
+from repro.core.batched import LayerTask, plan_buckets, quantize_layer_batch
 from repro.core.cloq import cloq_init, regularize_gram
 from repro.core.loftq import loftq_init
 from repro.core.magr import magr_preprocess
 from repro.core.optq import optq_quantize
 from repro.core.pipeline import _quantize_one
 from repro.core.quantizer import QuantConfig
+from repro.core.recipe import QuantRecipe, SiteRule
 from repro.models.modules import QSpec
 
 REPS = 3               # best-of reps for the engine comparison
@@ -91,6 +92,47 @@ def _bucket_row(m: int, n: int, n_layers: int, qspec: QSpec, rng) -> dict:
     return {"m": m, "n": n, "n_layers": n_layers,
             "sequential_s": round(t_seq, 3), "batched_s": round(t_bat, 3),
             "speedup": round(t_seq / t_bat, 2)}
+
+
+def _mixed_recipe_row(rng, n_layers: int = 8) -> dict:
+    """Heterogeneous-plan cost: one QuantRecipe resolving 2-bit/r16 CLoQ
+    MLP sites next to 4-bit/r8 CLoQ attention sites, executed as two
+    buckets by the same batched engine vs the per-site sequential loop.
+    Tracks that mixed plans cost bucket-engine time, not per-layer time."""
+    recipe = QuantRecipe(
+        rules=(SiteRule("*.mlp.*", bits=2, rank=16),
+               SiteRule("*.attn.*", bits=4, rank=8)),
+        method="cloq", qspec=QSpec(bits=4, group_size=64, rank=8))
+    paths = ([f"blocks.{i}.mlp.up" for i in range(n_layers)] +
+             [f"blocks.{i}.attn.q" for i in range(n_layers)])
+    sites = recipe.resolve(paths)
+    dims = {"mlp": (64, 128), "attn": (64, 64)}
+    keys = jax.random.split(jax.random.PRNGKey(0), len(paths))
+    tasks = []
+    for p, k in zip(paths, keys):
+        m, n = dims["mlp" if ".mlp." in p else "attn"]
+        W = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        X = rng.normal(size=(1024, m)).astype(np.float32)
+        tasks.append(LayerTask(p, None, W, jnp.asarray(X.T @ X), k,
+                               site=sites[p]))
+    n_buckets = len(plan_buckets(tasks))
+
+    def seq():
+        for t in tasks:
+            out = _quantize_one(t.W, t.H, t.site.qspec, t.site.method, t.key)
+        jax.block_until_ready(out["lora_a"])
+
+    def mixed():
+        outs = quantize_layer_batch(tasks)
+        jax.block_until_ready(outs[-1]["lora_a"])
+
+    seq()
+    mixed()        # compile both before timing
+    t_seq, t_mix = _best_of(seq), _best_of(mixed)
+    return {"n_layers": len(tasks), "n_buckets": n_buckets,
+            "rules": ["mlp: cloq/2b/r16 64x128", "attn: cloq/4b/r8 64x64"],
+            "sequential_s": round(t_seq, 3), "mixed_batched_s": round(t_mix, 3),
+            "speedup": round(t_seq / t_mix, 2)}
 
 
 # Distributed-engine comparison, run in a subprocess so we control the fake
@@ -258,6 +300,12 @@ def run() -> dict:
                   f"fused={row['sharded_batched_s']}s "
                   f"({row['speedup']}x)", flush=True)
 
+    mixed = _mixed_recipe_row(rng)
+    print(f"  mixed recipe ({mixed['n_buckets']} buckets, "
+          f"{mixed['n_layers']} sites): seq={mixed['sequential_s']}s "
+          f"mixed={mixed['mixed_batched_s']}s ({mixed['speedup']}x)",
+          flush=True)
+
     lq = _sharded_bucket_row(64, 64, 16, snippet=_LOFTQ_SHARDED_SNIPPET)
     if "error" in lq:
         print(f"  loftq sharded bucket: failed {lq['error']}", flush=True)
@@ -271,6 +319,7 @@ def run() -> dict:
            "batched_rows": batched_rows,
            "batched_speedup_best": max(r["speedup"] for r in batched_rows),
            "sharded_rows": sharded_rows,
+           "mixed_recipe_row": mixed,
            "loftq_sharded_row": lq,
            "note": ("paper Table 10: comparable runtimes; CLoQ trades "
                     "LoftQ's 5 SVD iterations for OPTQ+2 SVDs.  batched_s: "

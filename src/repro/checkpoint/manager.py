@@ -21,7 +21,11 @@ Fault-tolerance properties:
     per-leaf NamedShardings for the NEW mesh directly from that manifest
     (:func:`manifest_shardings`) — shard counts are re-resolved against the
     target mesh, and neither the planner nor the model config is needed at
-    restore time.
+    restore time.  The manifest also covers the weight-shared block's
+    per-site adapter stacks (``shared.site_lora.*``) and, since the
+    QuantRecipe redesign, records the full mixed-precision recipe the
+    checkpoint was quantized with (``meta.json ->
+    bucket_manifest.recipe``).
 """
 from __future__ import annotations
 
@@ -120,6 +124,17 @@ def manifest_shardings(manifest: dict, mesh, axis: str | None = None) -> dict:
     axis = axis or manifest.get("axis", "model")
     stacked = set(manifest.get("stacked", ()))
     out: dict = {}
+    # weight-shared per-site adapter stacks (shared.site_lora.<name>): the
+    # engine lays them out like any other task's adapters under an extra
+    # unsharded leading site dim — lora_b column-sharded when the column
+    # count divides the target mesh, lora_a replicated
+    for sl in manifest.get("site_lora", ()):
+        k = bucket_shards(sl["n"], sl["method"], mesh, axis)
+        ax = axis if k > 1 else None
+        specs = task_leaf_specs(sl["method"], ax, lead=1)
+        for leaf in ("lora_a", "lora_b"):
+            out[f"shared.site_lora.{sl['name']}.{leaf}"] = \
+                NamedSharding(mesh, P(*specs[leaf]))
     for bucket in manifest["buckets"]:
         spec = bucket["spec"]
         k = bucket_shards(spec["n"], spec["method"], mesh, axis)

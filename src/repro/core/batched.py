@@ -12,8 +12,13 @@ This module batches it:
     linear, or one expert slice of a stacked ``(E, m, n)`` MoE weight — is a
     :class:`LayerTask`.  Tasks are grouped into buckets keyed by
     :class:`BucketSpec`: ``(m, n, method, bits, group_size, rank, split,
-    block_size, …)``.  Everything shape- or branch-like (OPTQ's sweep block
-    via :func:`repro.core.optq.pick_block`, the MagR gate ``bits <= 4``) is
+    block_size, …)``.  Each task's ``(method, qspec)`` comes from its
+    resolved per-site spec (``LayerTask.site``, a
+    :class:`repro.core.recipe.SiteSpec`) when quantization was planned from
+    a :class:`~repro.core.recipe.QuantRecipe` — mixed-precision plans just
+    produce more buckets — or from the legacy global pair.  Everything
+    shape- or branch-like (OPTQ's sweep block via
+    :func:`repro.core.optq.pick_block`, the MagR gate ``bits <= 4``) is
     resolved *here*, at plan time, so the traced core has no data-dependent
     Python branching.
 
@@ -49,7 +54,10 @@ from __future__ import annotations
 
 import dataclasses
 from functools import lru_cache, partial
-from typing import Callable
+from typing import TYPE_CHECKING, Callable
+
+if TYPE_CHECKING:       # annotation only — no import cycle at runtime
+    from repro.core.recipe import SiteSpec
 
 import jax
 import jax.numpy as jnp
@@ -115,12 +123,34 @@ class BucketSpec:
 @dataclasses.dataclass
 class LayerTask:
     """One quantization site: a 2-D weight (possibly one expert slice of a
-    stacked MoE weight) plus its Gram and PRNG key."""
+    stacked MoE weight) plus its Gram and PRNG key.
+
+    ``site`` (a :class:`repro.core.recipe.SiteSpec`) carries the task's
+    *resolved* ``(method, qspec)`` when quantization was planned from a
+    :class:`~repro.core.recipe.QuantRecipe`; tasks without one fall back to
+    the global pair passed to :func:`plan_buckets` /
+    :func:`quantize_layer_batch`.  Mixing specs across tasks is free — the
+    planner keys buckets by the full static signature, so each distinct
+    resolved spec becomes its own bucket."""
     path: str                # lin path in the param tree
     expert: int | None       # index into the stacked (E, m, n) weight
     W: Array                 # (m, n)
     H: Array | np.ndarray | None   # (m, m) calibration Gram
     key: Array               # per-task PRNG key
+    site: "SiteSpec | None" = None   # resolved per-site spec (optional)
+
+
+def task_site(t: LayerTask, qspec=None, method: str | None = None):
+    """A task's effective ``(qspec, method)``: its resolved
+    :class:`~repro.core.recipe.SiteSpec` when present, else the global
+    fallback pair."""
+    if t.site is not None:
+        return t.site.qspec, t.site.method
+    if qspec is None or method is None:
+        raise ValueError(
+            f"task {t.path!r} carries no resolved SiteSpec and no global "
+            "(qspec, method) fallback was given")
+    return qspec, method
 
 
 def make_spec(m: int, n: int, qspec, method: str, has_gram: bool,
@@ -376,16 +406,20 @@ def per_layer_sharded_dispatch(tasks: list[LayerTask], qspec, mesh,
     return outs
 
 
-def plan_buckets(tasks: list[LayerTask], qspec, method: str,
+def plan_buckets(tasks: list[LayerTask], qspec=None, method: str | None = None,
                  base: QuantConfig | None = None, *, mesh=None,
                  axis: str = "model") -> dict[BucketSpec, list[int]]:
     """Group task indices by executable signature (insertion-ordered).
 
     Args:
         tasks:  flattened quantization sites (see :class:`LayerTask`).
-        qspec:  ``repro.models.modules.QSpec`` — bits/group/rank/split.
-        method: init method name (``cloq``/``gptq``/``loftq``/``qlora``/
-                ``rtn``).
+                Tasks carrying a resolved ``site``
+                (:class:`repro.core.recipe.SiteSpec`) bucket by their own
+                spec — one run may mix methods, bit-widths, and ranks.
+        qspec:  fallback ``repro.models.modules.QSpec`` for tasks without a
+                resolved site (the legacy global pair).
+        method: fallback init method name (``cloq``/``gptq``/``loftq``/
+                ``qlora``/``rtn``) for tasks without a resolved site.
         base:   optional :class:`QuantConfig` overriding sweep defaults.
         mesh:   optional ``jax.sharding.Mesh``; buckets whose column count
                 divides ``mesh.shape[axis]`` get ``n_shards > 1`` and run
@@ -396,13 +430,14 @@ def plan_buckets(tasks: list[LayerTask], qspec, method: str,
     Returns an insertion-ordered ``{BucketSpec: [task indices]}``."""
     buckets: dict[BucketSpec, list[int]] = {}
     for i, t in enumerate(tasks):
+        t_qspec, t_method = task_site(t, qspec, method)
         m, n = t.W.shape
         has_gram = t.H is not None
-        if method in GRAM_METHODS and not has_gram:
+        if t_method in GRAM_METHODS and not has_gram:
             raise ValueError(
-                f"method {method!r} needs a calibration Gram for {t.path}"
+                f"method {t_method!r} needs a calibration Gram for {t.path}"
                 f"{'' if t.expert is None else f'[expert {t.expert}]'}")
-        spec = make_spec(m, n, qspec, method, has_gram, base,
+        spec = make_spec(m, n, t_qspec, t_method, has_gram, base,
                          mesh=mesh, axis=axis)
         buckets.setdefault(spec, []).append(i)
     return buckets
@@ -445,7 +480,8 @@ def _stage_bucket(tasks: list[LayerTask], idxs: list[int],
     return Ws, Hs, keys
 
 
-def quantize_layer_batch(tasks: list[LayerTask], qspec, method: str,
+def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
+                         method: str | None = None,
                          base: QuantConfig | None = None,
                          progress: Callable[[str], None] | None = None,
                          *, mesh=None, axis: str = "model",
@@ -456,12 +492,17 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec, method: str,
     (``pipeline.quantize_model(engine="batched")`` drives it).
 
     Args:
-        tasks:    flattened quantization sites, one per (layer | expert).
-        qspec:    ``QSpec`` with bits/group_size/rank/split.
-        method:   init method (see module docstring).
+        tasks:    flattened quantization sites, one per (layer | expert),
+                  each optionally carrying its resolved ``site`` spec
+                  (mixed-precision recipes; see :func:`plan_buckets`).
+        qspec:    fallback ``QSpec`` (bits/group_size/rank/split) for tasks
+                  without a resolved site.
+        method:   fallback init method (see module docstring).
         base:     optional ``QuantConfig`` overriding sweep defaults.
         progress: optional callback, called once per *bucket* with a
-                  human-readable line.
+                  human-readable plan-composition line
+                  (``method/bits/rank x layer-count x shard-count``) so
+                  long mixed runs are observable.
         mesh:     optional ``jax.sharding.Mesh``: buckets run column-sharded
                   over ``axis`` where the planner allows (see
                   :func:`plan_buckets`); ``None`` = single-device.
@@ -483,10 +524,12 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec, method: str,
         spec, idxs = items[b]
         Ws, Hs, keys = staged
         if progress:
+            g = "col" if spec.group_size is None else spec.group_size
             shard_note = (f" sharded x{spec.n_shards}"
-                          if spec.n_shards > 1 else "")
-            progress(f"[bucket {b}] {spec.m}x{spec.n} "
-                     f"{spec.method} x{len(idxs)} layers{shard_note}")
+                          if spec.n_shards > 1 else " unsharded")
+            progress(f"[bucket {b}] {spec.method}/{spec.bits}b/g{g}/"
+                     f"r{spec.rank} {spec.m}x{spec.n} x{len(idxs)} "
+                     f"layers{shard_note}")
         if spec.n_shards > 1:
             out = run_bucket_sharded(Ws, Hs, keys, spec, mesh, axis)
         else:

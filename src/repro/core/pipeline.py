@@ -5,6 +5,23 @@ form: every block linear replaced by {qcodes, scales, zeros, lora_a, lora_b},
 with the base quantized by MagR→OPTQ against calibration Grams and the LoRA
 adapters initialized by CLoQ's closed form (or a baseline method).
 
+The primary signature is declarative::
+
+    quantize_model(params, cfg, calib, recipe=QuantRecipe(
+        rules=(SiteRule("blocks.0.*", skip=True),        # left dense
+               SiteRule("*.mlp.*", bits=2, rank=32),     # 2-bit MLPs
+               SiteRule("*.attn.*", bits=4, rank=16)),   # 4-bit attention
+        method="cloq", qspec=QSpec(bits=4, rank=16)))    # everything else
+
+The :class:`repro.core.recipe.QuantRecipe` resolves every quantization
+site to a frozen per-site ``(method, qspec | skip)`` ONCE, at plan time
+(first-match-wins; see :mod:`repro.core.recipe`), and the per-site specs
+are threaded through task gathering, bucket planning, and both engines —
+one run can mix CLoQ/LoftQ/QLoRA/RTN/GPTQ at different bit-widths and
+ranks across buckets.  The legacy global pair
+``quantize_model(method=..., qspec=...)`` still works as a zero-rule
+recipe via a deprecation shim.
+
 Calibration runs the model *eagerly* (``scan_layers=False``) so the
 name-scope capture hooks see concrete activations.  The zamba2-style shared
 block gets ONE quantized base from the pooled Gram and per-site LoRA from
@@ -46,6 +63,7 @@ Methods:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Iterable
 
 import jax
@@ -55,6 +73,7 @@ import numpy as np
 from repro.core.batched import (GRAM_METHODS, LayerTask, bucket_shards,
                                 magr_alpha, plan_buckets, plan_manifest,
                                 quantize_layer_batch)
+from repro.core.recipe import QuantRecipe, SiteSpec
 from repro.core.cloq import cloq_init, cloq_site_lora, regularize_gram
 from repro.core.loftq import loftq_init, qlora_init
 from repro.core.magr import magr_preprocess
@@ -236,21 +255,31 @@ def _set_site_lora(new_params: dict, rest: str, As, Bs, dtype) -> None:
 # ---------------------------------------------------------------------------
 
 
-def _quantize_model_sequential(eparams: dict, store: GramStore, qspec: QSpec,
-                               method: str, seed: int, cfg: ModelConfig,
-                               new_params: dict,
+def _quantize_model_sequential(eparams: dict, store: GramStore,
+                               sites: dict[str, SiteSpec], seed: int,
+                               cfg: ModelConfig, new_params: dict,
                                progress: Callable[[str], None] | None,
                                mesh=None, shard_axis: str = "model") -> None:
     assert mesh is None, "quantize_model rejects mesh+sequential up front"
     key = jax.random.PRNGKey(seed)
     for i, lin_path in enumerate(quantizable_linear_paths(eparams)):
+        # PRNG keys split per quantizable path — skipped sites included —
+        # so key assignment is independent of the recipe's skip rules and
+        # identical across engines
         key, sub = jax.random.split(key)
+        site = sites[lin_path]
+        if site.skip:
+            if progress:
+                progress(f"[{i}] {lin_path} skipped (left dense)")
+            continue
+        qspec, method = site.qspec, site.method
         lin = dict(get_path(eparams, lin_path))
         W = lin.pop("w")
         is_shared = lin_path.startswith("shared.block.")
         scope_path = _scope_for(lin_path)
         if progress:
-            progress(f"[{i}] {lin_path} {tuple(W.shape)}")
+            progress(f"[{i}] {lin_path} {tuple(W.shape)} "
+                     f"{method}/{qspec.bits}b/r{qspec.rank}")
 
         if W.ndim == 3:        # stacked MoE experts (E, m, n)
             H = store.grams.get(scope_path)      # (E, D, D) or None
@@ -296,19 +325,24 @@ def _quantize_model_sequential(eparams: dict, store: GramStore, qspec: QSpec,
 # ---------------------------------------------------------------------------
 
 
-def _gather_tasks(eparams: dict, store: GramStore, seed: int):
-    """Flatten every quantization site into a LayerTask, splitting PRNG
-    keys in path order exactly like the sequential loop (bit-for-bit
-    random-init parity)."""
+def _gather_tasks(eparams: dict, store: GramStore,
+                  sites: dict[str, SiteSpec], seed: int):
+    """Flatten every (non-skipped) quantization site into a LayerTask
+    carrying its resolved SiteSpec, splitting PRNG keys in path order
+    exactly like the sequential loop (bit-for-bit random-init parity;
+    skipped sites consume a key but produce no task)."""
     tasks: list[LayerTask] = []
     groups: list[dict] = []
     key = jax.random.PRNGKey(seed)
     for lin_path in quantizable_linear_paths(eparams):
         key, sub = jax.random.split(key)
+        site = sites[lin_path]
+        if site.skip:
+            continue
         lin = dict(get_path(eparams, lin_path))
         W = lin.pop("w")
         g = {"path": lin_path, "keep": lin, "W": W, "kind": "dense",
-             "tasks": []}
+             "site": site, "tasks": []}
         if W.ndim == 3:        # stacked MoE experts: a natural bucket
             g["kind"] = "moe"
             H = store.grams.get(_scope_for(lin_path))
@@ -316,31 +350,34 @@ def _gather_tasks(eparams: dict, store: GramStore, seed: int):
             for e in range(W.shape[0]):
                 g["tasks"].append(len(tasks))
                 tasks.append(LayerTask(lin_path, e, W[e],
-                                       None if H is None else H[e], keys[e]))
+                                       None if H is None else H[e], keys[e],
+                                       site=site))
         elif lin_path.startswith("shared.block."):
             g["kind"] = "shared"
             rest, site_paths, pooled = _shared_site_grams(store, lin_path)
             g["rest"], g["site_paths"] = rest, site_paths
             g["tasks"].append(len(tasks))
-            tasks.append(LayerTask(lin_path, None, W, pooled, sub))
+            tasks.append(LayerTask(lin_path, None, W, pooled, sub,
+                                   site=site))
         else:
             g["tasks"].append(len(tasks))
             tasks.append(LayerTask(lin_path, None, W,
                                    store.grams.get(_scope_for(lin_path)),
-                                   sub))
+                                   sub, site=site))
         groups.append(g)
     return tasks, groups
 
 
-def _quantize_model_batched(eparams: dict, store: GramStore, qspec: QSpec,
-                            method: str, seed: int, cfg: ModelConfig,
-                            new_params: dict,
+def _quantize_model_batched(eparams: dict, store: GramStore,
+                            sites: dict[str, SiteSpec], seed: int,
+                            cfg: ModelConfig, new_params: dict,
                             progress: Callable[[str], None] | None,
                             mesh=None, shard_axis: str = "model") -> None:
-    tasks, groups = _gather_tasks(eparams, store, seed)
-    results = quantize_layer_batch(tasks, qspec, method, progress=progress,
+    tasks, groups = _gather_tasks(eparams, store, sites, seed)
+    results = quantize_layer_batch(tasks, progress=progress,
                                    mesh=mesh, axis=shard_axis)
     for g in groups:
+        qspec, method = g["site"].qspec, g["site"].method
         if g["kind"] == "moe":
             outs = [results[i] for i in g["tasks"]]
             newlin = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
@@ -375,12 +412,68 @@ _ENGINES = {"batched": _quantize_model_batched,
             "sequential": _quantize_model_sequential}
 
 
+def _check_scan_uniform(sites: dict[str, SiteSpec], cfg: ModelConfig) -> None:
+    """Scan-stacked containers re-stack per-layer leaves after
+    quantization, which requires every layer of a container to share one
+    leaf structure — i.e. a recipe that is layer-uniform within each
+    stacked container.  Depth-dependent plans (skip block 0, 2-bit the
+    deep half, …) need ``scan_layers=False``.  Fail at plan time with the
+    offending container instead of deep inside ``to_scan_params``."""
+    if not cfg.scan_layers:
+        return
+    groups: dict[tuple[str, str], set[SiteSpec]] = {}
+    for p, s in sites.items():
+        segs = p.split(".")
+        if segs[0] in _STACK_KEYS and len(segs) > 1 and segs[1].isdigit():
+            groups.setdefault((segs[0], ".".join(segs[2:])), set()).add(s)
+    for (container, rest), specs in sorted(groups.items()):
+        if len(specs) > 1:
+            raise ValueError(
+                f"recipe resolves layers of the scan-stacked container "
+                f"{container!r} to {len(specs)} different specs at "
+                f"{container}.<i>.{rest}; scan stacking needs layer-uniform "
+                "rules — use a config with scan_layers=False for "
+                "depth-dependent plans")
+
+
+def _coerce_recipe(recipe: QuantRecipe | None, method: str | None,
+                   qspec: QSpec | None, cfg: ModelConfig,
+                   caller: str) -> QuantRecipe:
+    """Back-compat shim: the legacy global ``(method, qspec)`` pair becomes
+    a zero-rule recipe (every site resolves to the defaults).  Explicitly
+    passing the legacy kwargs warns; mixing them with ``recipe=`` is an
+    error."""
+    if recipe is not None:
+        if method is not None or qspec is not None:
+            raise ValueError(f"{caller}: pass either recipe= or the legacy "
+                             "(method=, qspec=) pair, not both")
+        return recipe
+    if method is not None or qspec is not None:
+        warnings.warn(
+            f"{caller}(method=, qspec=) is deprecated: the global pair is "
+            "the zero-rule recipe QuantRecipe(method=..., qspec=...); pass "
+            "recipe= for per-site mixed-precision plans",
+            DeprecationWarning, stacklevel=3)
+    return QuantRecipe.single(method or "cloq",
+                              qspec or cfg.quant or QSpec())
+
+
 def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
-                   *, method: str = "cloq", qspec: QSpec | None = None,
+                   *, recipe: QuantRecipe | None = None,
+                   method: str | None = None, qspec: QSpec | None = None,
                    seed: int = 0, engine: str = "batched",
                    progress: Callable[[str], None] | None = None,
                    mesh=None, shard_axis: str = "model"):
     """Quantize all block linears of ``params``.
+
+    ``recipe`` (the primary input — :class:`repro.core.recipe.QuantRecipe`)
+    declares per-site mixed-precision plans: ordered glob/regex rules over
+    eager param paths resolving to per-site ``(method, qspec)`` overrides
+    or ``skip``, first match wins.  All sites are resolved once, up front;
+    each distinct resolved spec becomes its own bucket in the batched
+    engine, so one call can mix methods, bit-widths, and ranks.  The
+    legacy ``method=``/``qspec=`` pair still works as a zero-rule recipe
+    (deprecation shim).
 
     ``engine`` selects the batched bucket engine (default) or the
     sequential per-layer fallback; both produce the same leaves (see module
@@ -394,7 +487,10 @@ def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
     committed sharded arrays; ``lora_a`` stays replicated.
 
     Returns (new_params in the input (scan/eager) layout, new_cfg with
-    ``quant=qspec`` set, gram_store)."""
+    ``quant=`` set to the recipe's default qspec, gram_store).  Skipped
+    sites keep their dense ``w`` leaf; ``linear_apply`` dequantizes each
+    quantized site from its own stored shapes, so mixed bit-widths need no
+    per-site config at apply time."""
     if engine not in _ENGINES:
         raise ValueError(f"unknown engine {engine!r}; options "
                          f"{tuple(_ENGINES)}")
@@ -402,13 +498,15 @@ def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
         # fail before the (expensive) calibration pass, not after
         raise ValueError("mesh sharding is only supported by the batched "
                          "engine; use engine='batched' or drop mesh=")
-    qspec = qspec or cfg.quant or QSpec()
+    recipe = _coerce_recipe(recipe, method, qspec, cfg, "quantize_model")
     eparams = to_eager_params(params, cfg)
+    sites = recipe.resolve(quantizable_linear_paths(eparams))
+    _check_scan_uniform(sites, cfg)
     store = run_calibration(eparams, cfg, calib_batches)
     new_params = jax.tree.map(lambda a: a, eparams)   # structural copy
-    _ENGINES[engine](eparams, store, qspec, method, seed, cfg, new_params,
+    _ENGINES[engine](eparams, store, sites, seed, cfg, new_params,
                      progress, mesh, shard_axis)
-    new_cfg = dataclasses.replace(cfg, quant=qspec)
+    new_cfg = dataclasses.replace(cfg, quant=recipe.qspec)
     if cfg.scan_layers:
         new_params = to_scan_params(new_params, cfg)
     return new_params, new_cfg, store
@@ -429,34 +527,41 @@ def _abstract_eager_shapes(cfg: ModelConfig):
     return jax.tree.map(lambda s: s, shapes)
 
 
-def _abstract_tasks(eshapes: dict, method: str) -> list[LayerTask]:
+def _abstract_tasks(eshapes: dict,
+                    sites: dict[str, SiteSpec]) -> list[LayerTask]:
     """Flatten quantization sites of an abstract shape tree into
-    ShapeDtypeStruct-backed :class:`LayerTask`s — same site discovery and
-    ordering as :func:`_gather_tasks`, so planning them reproduces the real
-    engine's buckets exactly (the planner only reads ``W.shape`` and
-    ``H is not None``)."""
+    ShapeDtypeStruct-backed :class:`LayerTask`s carrying their resolved
+    SiteSpecs — same site discovery and ordering as :func:`_gather_tasks`
+    (skipped sites produce no task), so planning them reproduces the real
+    engine's buckets exactly (the planner only reads ``W.shape``,
+    ``H is not None``, and the site spec)."""
     SDS = jax.ShapeDtypeStruct
     tasks: list[LayerTask] = []
     for lin_path in quantizable_linear_paths(eshapes):
+        site = sites[lin_path]
+        if site.skip:
+            continue
         W = get_path(eshapes, lin_path)["w"]
+        has_gram = site.method in GRAM_METHODS
         if W.ndim == 3:
             E, m, n = W.shape
             for e in range(E):
                 tasks.append(LayerTask(
                     lin_path, e, SDS((m, n), jnp.float32),
-                    SDS((m, m), jnp.float32)
-                    if method in GRAM_METHODS else None, None))
+                    SDS((m, m), jnp.float32) if has_gram else None, None,
+                    site=site))
         else:
             m, n = W.shape
             tasks.append(LayerTask(
                 lin_path, None, SDS((m, n), jnp.float32),
-                SDS((m, m), jnp.float32)
-                if method in GRAM_METHODS else None, None))
+                SDS((m, m), jnp.float32) if has_gram else None, None,
+                site=site))
     return tasks
 
 
-def quantization_manifest(cfg: ModelConfig, method: str = "cloq",
-                          qspec: QSpec | None = None, *, mesh=None,
+def quantization_manifest(cfg: ModelConfig, method: str | None = None,
+                          qspec: QSpec | None = None, *,
+                          recipe: QuantRecipe | None = None, mesh=None,
                           shard_axis: str = "model",
                           _eshapes: dict | None = None) -> dict:
     """Bucket manifest of a ``quantize_model`` run, built from abstract
@@ -466,15 +571,39 @@ def quantization_manifest(cfg: ModelConfig, method: str = "cloq",
     over ShapeDtypeStruct tasks, so the returned manifest (bucket specs
     with shard counts, task -> bucket assignment, param-tree paths) is
     exactly the plan the batched engine executes for this
-    ``(cfg, method, qspec, mesh)``.  Hand it to
+    ``(cfg, recipe, mesh)``.  The manifest also records:
+
+    * ``recipe`` — the serialized :class:`QuantRecipe`, so a production
+      checkpoint carries the full mixed-precision plan it was built from;
+    * ``site_lora`` — one entry per weight-shared linear (``shared.block``
+      sites), so ``checkpoint.manager.manifest_shardings`` can lay out the
+      per-site adapter stacks (``shared.site_lora.*``) on a new mesh
+      without re-running ``launch.shardings.param_specs``.
+
+    The legacy positional ``(method, qspec)`` pair is accepted as a
+    zero-rule recipe.  Hand the result to
     ``checkpoint.manager.save_tree(..., manifest=...)`` so later restores
     can rebuild per-bucket shardings without re-running the planner
     (``checkpoint.manager.manifest_shardings``)."""
-    qspec = qspec or cfg.quant or QSpec()
+    if recipe is None:
+        recipe = QuantRecipe.single(method or "cloq",
+                                    qspec or cfg.quant or QSpec())
+    elif method is not None or qspec is not None:
+        raise ValueError("quantization_manifest: pass either recipe= or "
+                         "the legacy (method, qspec) pair, not both")
     eshapes = _abstract_eager_shapes(cfg) if _eshapes is None else _eshapes
-    tasks = _abstract_tasks(eshapes, method)
-    buckets = plan_buckets(tasks, qspec, method, mesh=mesh, axis=shard_axis)
+    sites = recipe.resolve(quantizable_linear_paths(eshapes))
+    _check_scan_uniform(sites, cfg)
+    tasks = _abstract_tasks(eshapes, sites)
+    buckets = plan_buckets(tasks, mesh=mesh, axis=shard_axis)
     manifest = plan_manifest(tasks, buckets, axis=shard_axis)
+    manifest["recipe"] = recipe.to_dict()
+    manifest["site_lora"] = [
+        {"name": p[len("shared.block."):].replace(".", "_"),
+         "n": int(get_path(eshapes, p)["w"].shape[-1]),
+         "method": s.method}
+        for p, s in sites.items()
+        if p.startswith("shared.block.") and not s.skip]
     if cfg.scan_layers:
         # the saved param layout stacks these containers over layers: record
         # them so manifest_shardings can alias each eager task path to its
@@ -484,49 +613,80 @@ def quantization_manifest(cfg: ModelConfig, method: str = "cloq",
 
 
 def _quant_leaf_shapes(m: int, n: int, qspec: QSpec, dtype,
-                       lead: tuple = ()) -> dict:
+                       lead: tuple = (), method: str = "cloq") -> dict:
     SDS = jax.ShapeDtypeStruct
     g = m if qspec.group_size is None else qspec.group_size
-    mp = m * qspec.bits // 8 if qspec.bits in (2, 4) else m
-    return {
+    bits = 4 if method == "qlora" else qspec.bits       # NF4 is always 4-bit
+    mp = m * bits // 8 if bits in (2, 4) else m
+    out = {
         "qcodes": SDS(lead + (mp, n), jnp.uint8),
-        "scales": SDS(lead + (m // g, n), jnp.float32),
-        "zeros": SDS(lead + (m // g, n), jnp.float32),
         "lora_a": SDS(lead + (m, qspec.rank), dtype),
         "lora_b": SDS(lead + (n, qspec.rank), dtype),
     }
+    if method == "qlora":
+        out["absmax"] = SDS(lead + (m // g, n), jnp.float32)
+    else:
+        out["scales"] = SDS(lead + (m // g, n), jnp.float32)
+        out["zeros"] = SDS(lead + (m // g, n), jnp.float32)
+    return out
 
 
-def quantized_param_shapes(cfg: ModelConfig, *, method: str = "cloq",
+def quantized_param_shapes(cfg: ModelConfig, *, method: str | None = None,
+                           recipe: QuantRecipe | None = None,
                            mesh=None, shard_axis: str = "model",
                            with_manifest: bool = False):
     """ShapeDtypeStruct tree of the post-quantization param layout, built
     without running calibration or allocating anything.
 
+    ``recipe`` resolves per-site specs exactly like ``quantize_model``:
+    each site's leaf shapes follow its own resolved ``(bits, group_size,
+    rank)``, skipped sites keep their dense ``w``, and the weight-shared
+    block's ``shared.site_lora`` stacks take the resolved rank.  Without a
+    recipe, the global ``cfg.quant`` (+ ``method``) pair is used as a
+    zero-rule recipe.
+
     With ``with_manifest=True``, also returns the bucket manifest of the
-    plan the batched engine would execute for ``(cfg, method, mesh)`` —
+    plan the batched engine would execute for ``(cfg, recipe, mesh)`` —
     ``(shapes, manifest)`` — i.e. :func:`quantization_manifest` evaluated
     on the same abstract shapes, ready to be saved next to a checkpoint of
     this layout."""
-    qspec = cfg.quant
-    assert qspec is not None, "cfg.quant must be set"
+    if recipe is None:
+        assert cfg.quant is not None, "cfg.quant must be set"
+        recipe = QuantRecipe.single(method or "cloq", cfg.quant)
     shapes = _abstract_eager_shapes(cfg)
-    manifest = (quantization_manifest(cfg, method, qspec, mesh=mesh,
+    sites = recipe.resolve(quantizable_linear_paths(shapes))
+    _check_scan_uniform(sites, cfg)
+    manifest = (quantization_manifest(cfg, recipe=recipe, mesh=mesh,
                                       shard_axis=shard_axis,
                                       _eshapes=shapes)
                 if with_manifest else None)
-    for lin_path in quantizable_linear_paths(shapes):
+    for lin_path, site in sites.items():
+        if site.skip:
+            continue                         # dense w stays in place
+        qspec = site.qspec
         lin = dict(get_path(shapes, lin_path))
         W = lin.pop("w")
         if W.ndim == 3:
             E, m, n = W.shape
-            newlin = _quant_leaf_shapes(m, n, qspec, cfg.dtype, (E,))
+            newlin = _quant_leaf_shapes(m, n, qspec, cfg.dtype, (E,),
+                                        site.method)
         else:
             m, n = W.shape
-            newlin = _quant_leaf_shapes(m, n, qspec, cfg.dtype)
+            newlin = _quant_leaf_shapes(m, n, qspec, cfg.dtype,
+                                        method=site.method)
         if lin_path.startswith("shared.block."):
             newlin.pop("lora_a")
             newlin.pop("lora_b")
+            # the per-site adapter stacks take the resolved rank
+            sl_name = lin_path[len("shared.block."):].replace(".", "_")
+            sl = get_path(shapes, "shared.site_lora")
+            if sl_name in sl:
+                S = sl[sl_name]["lora_a"].shape[0]
+                sl[sl_name] = {
+                    "lora_a": jax.ShapeDtypeStruct((S, m, qspec.rank),
+                                                   cfg.dtype),
+                    "lora_b": jax.ShapeDtypeStruct((S, n, qspec.rank),
+                                                   cfg.dtype)}
         lin.update(newlin)
         set_path(shapes, lin_path, lin)
     if cfg.scan_layers:

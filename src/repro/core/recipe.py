@@ -1,0 +1,181 @@
+"""Declarative per-site quantization plans: the ``QuantRecipe`` API.
+
+CLoQ's whole point is *per-layer* calibrated initialization, and the
+paper's gains concentrate at ultra low bit-widths — so the configuration
+space that matters is heterogeneous: 2-bit MLPs with a higher LoRA rank,
+4-bit attention, a skipped ``lm_head``, a data-free baseline on
+insensitive layers.  A :class:`QuantRecipe` expresses that space
+declaratively:
+
+* a :class:`SiteRule` maps a glob (or regex) over **eager param paths**
+  (``blocks.3.mlp.up`` — see ``pipeline.quantizable_linear_paths``) to a
+  method, :class:`~repro.models.modules.QSpec` field overrides, or
+  ``skip``;
+* rules are ordered, **first match wins**; a path no rule matches falls
+  through to the recipe's default ``(method, qspec)``;
+* :meth:`QuantRecipe.resolve` turns ``paths`` into ``{path: SiteSpec}``
+  ONCE, at plan time.  Everything downstream — the bucket planner, the
+  executors, the manifest, the abstract shape builders — consumes the
+  frozen :class:`SiteSpec`, never the recipe, so resolution cost and rule
+  semantics live in exactly one place.
+
+Because the batched engine already keys buckets by
+``(m, n, method, bits, group_size, rank, …)``
+(:class:`repro.core.batched.BucketSpec`), a mixed plan rides the fused
+``shard_map(vmap)`` engine for free: each distinct resolved spec simply
+becomes its own bucket.
+
+The legacy ``quantize_model(method=..., qspec=...)`` pair is exactly the
+zero-rule recipe ``QuantRecipe(method=..., qspec=...)`` (every path falls
+through to the default) — the shim in :mod:`repro.core.pipeline` builds it
+and warns.
+
+Glob matching uses :func:`fnmatch.fnmatchcase`, so ``*`` crosses dots:
+``*.mlp.*`` matches ``blocks.7.mlp.up``.  Set ``regex=True`` to match with
+:func:`re.search` instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+import re
+
+from repro.models.modules import QSpec
+
+# method names the engines implement (see pipeline module docstring)
+METHODS = ("cloq", "gptq", "loftq", "qlora", "rtn")
+
+# QSpec fields a SiteRule may override (None = inherit the default)
+_OVERRIDE_FIELDS = ("bits", "group_size", "rank", "split")
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteRule:
+    """One ordered rule: pattern over eager param paths -> overrides.
+
+    ``method``/``bits``/``group_size``/``rank``/``split`` default to
+    ``None`` = inherit from the recipe's defaults; ``skip=True`` leaves the
+    matched linear dense (no quantization, no adapters)."""
+    pattern: str
+    method: str | None = None
+    skip: bool = False
+    bits: int | None = None
+    group_size: int | None = None
+    rank: int | None = None
+    split: str | None = None
+    regex: bool = False
+
+    def matches(self, path: str) -> bool:
+        if self.regex:
+            return re.search(self.pattern, path) is not None
+        return fnmatch.fnmatchcase(path, self.pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteSpec:
+    """Fully-resolved decision for ONE quantization site.
+
+    This — not the recipe — is what the planner, the executors, the
+    manifest, and the abstract shape builders consume: ``LayerTask.site``
+    carries one, and ``batched.plan_buckets`` derives each task's
+    :class:`~repro.core.batched.BucketSpec` from it."""
+    method: str
+    qspec: QSpec
+    skip: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantRecipe:
+    """Ordered site rules + the default ``(method, qspec)`` fallback.
+
+    >>> from repro.models.modules import QSpec
+    >>> r = QuantRecipe(rules=(SiteRule("*.mlp.*", bits=2, rank=16),
+    ...                        SiteRule("*.head*", skip=True)),
+    ...                 method="cloq", qspec=QSpec(bits=4, rank=8))
+    >>> s = r.resolve_one("blocks.0.mlp.up")
+    >>> (s.method, s.qspec.bits, s.qspec.rank)
+    ('cloq', 2, 16)
+    >>> r.resolve_one("blocks.1.attn.q").qspec.bits   # unmatched -> default
+    4
+    """
+    rules: tuple[SiteRule, ...] = ()
+    method: str = "cloq"
+    qspec: QSpec = QSpec()
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(
+            SiteRule(**r) if isinstance(r, dict) else r for r in self.rules))
+        if self.method not in METHODS:
+            raise ValueError(f"unknown default method {self.method!r}; "
+                             f"options {METHODS}")
+        for r in self.rules:
+            if r.method is not None and r.method not in METHODS:
+                raise ValueError(f"rule {r.pattern!r}: unknown method "
+                                 f"{r.method!r}; options {METHODS}")
+
+    # -- resolution ---------------------------------------------------------
+
+    def resolve_one(self, path: str) -> SiteSpec:
+        """First-match-wins resolution of one eager param path."""
+        for rule in self.rules:
+            if not rule.matches(path):
+                continue
+            if rule.skip:
+                return SiteSpec(self.method, self.qspec, skip=True)
+            method = rule.method or self.method
+            over = {f: getattr(rule, f) for f in _OVERRIDE_FIELDS
+                    if getattr(rule, f) is not None}
+            return SiteSpec(method, dataclasses.replace(
+                self.qspec, method=method, **over))
+        return SiteSpec(self.method,
+                        dataclasses.replace(self.qspec, method=self.method))
+
+    def resolve(self, paths) -> dict[str, SiteSpec]:
+        """Resolve every path ONCE, at plan time.  The returned
+        ``{path: SiteSpec}`` is the only thing the engines see."""
+        return {p: self.resolve_one(p) for p in paths}
+
+    # -- construction helpers ----------------------------------------------
+
+    @classmethod
+    def single(cls, method: str, qspec: QSpec) -> "QuantRecipe":
+        """The legacy global ``(method, qspec)`` pair as a zero-rule
+        recipe — the back-compat shim in ``pipeline.quantize_model``."""
+        return cls(rules=(), method=method, qspec=qspec)
+
+    # -- (de)serialization --------------------------------------------------
+
+    def to_dict(self) -> dict:
+        rules = []
+        for r in self.rules:
+            d = {"pattern": r.pattern}
+            for f in ("method", "bits", "group_size", "rank", "split"):
+                if getattr(r, f) is not None:
+                    d[f] = getattr(r, f)
+            if r.skip:
+                d["skip"] = True
+            if r.regex:
+                d["regex"] = True
+            rules.append(d)
+        return {"version": 1, "method": self.method,
+                "qspec": dataclasses.asdict(self.qspec), "rules": rules}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "QuantRecipe":
+        qspec = QSpec(**d.get("qspec", {}))
+        return cls(rules=tuple(SiteRule(**r) for r in d.get("rules", ())),
+                   method=d.get("method", "cloq"), qspec=qspec)
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "QuantRecipe":
+        return cls.from_dict(json.loads(s))
+
+    @classmethod
+    def load(cls, path: str) -> "QuantRecipe":
+        """Load a recipe from a JSON file (``train --recipe plan.json``)."""
+        with open(path) as f:
+            return cls.from_dict(json.load(f))

@@ -151,7 +151,8 @@ def lower_cell(arch: str, cell: str, *, multi_pod: bool = False,
                loss_chunk: int = 0, attn_chunk: int = 0,
                seq_shard: bool = False, dp_only: bool = False,
                prefill_last: bool = False, microbatch: int = 1,
-               ssm_chunk: int = 0, kv8: bool = False) -> dict:
+               ssm_chunk: int = 0, kv8: bool = False,
+               recipe_path: str | None = None) -> dict:
     from repro.configs import get_config
     from repro.launch.mesh import make_production_mesh, pcontext_for
     from repro.launch.steps import (SHAPE_CELLS, abstract_cache,
@@ -187,6 +188,14 @@ def lower_cell(arch: str, cell: str, *, multi_pod: bool = False,
         overrides["ssm_chunk"] = ssm_chunk
     cfg = get_config(arch, **overrides)
 
+    # per-site mixed-precision plan: the abstract quantized state is built
+    # per resolved spec (2-bit MLP leaves next to 4-bit attention leaves,
+    # skipped sites dense) and lowered/sharded like any other layout
+    recipe = None
+    if recipe_path:
+        from repro.core.recipe import QuantRecipe
+        recipe = QuantRecipe.load(recipe_path)
+
     ok, why = cell_applicable(cfg, cell)
     if not ok:
         return {"arch": arch, "cell": cell, "skipped": True, "reason": why}
@@ -207,7 +216,7 @@ def lower_cell(arch: str, cell: str, *, multi_pod: bool = False,
 
     if kind == "train":
         ocfg = OptConfig(total_steps=1000, microbatch=microbatch)
-        state_shapes = abstract_state(cfg, ocfg)
+        state_shapes = abstract_state(cfg, ocfg, recipe)
         if dp_only:
             st_specs = jax.tree.map(
                 lambda s: P(*([None] * len(s.shape))), state_shapes)
@@ -222,7 +231,7 @@ def lower_cell(arch: str, cell: str, *, multi_pod: bool = False,
                          donate_argnums=(0,))
         lowered = jitted.lower(state_shapes, batch_specs(cfg, cell))
     elif kind == "prefill":
-        pshapes = abstract_params(cfg)
+        pshapes = abstract_params(cfg, recipe)
         p_specs = param_specs(pshapes, mesh)
         if dp_only:
             p_specs = jax.tree.map(lambda s: P(*([None] * len(s))), p_specs,
@@ -233,7 +242,7 @@ def lower_cell(arch: str, cell: str, *, multi_pod: bool = False,
                                              named(b_specs, mesh)))
         lowered = jitted.lower(pshapes, batch_specs(cfg, cell))
     else:  # decode
-        pshapes = abstract_params(cfg)
+        pshapes = abstract_params(cfg, recipe)
         p_specs = param_specs(pshapes, mesh)
         # f8 KV cache (beyond-paper §Perf lever): halves the HBM traffic of
         # the memory-bound decode GEMV attention reads; decode writes cast
@@ -271,6 +280,7 @@ def lower_cell(arch: str, cell: str, *, multi_pod: bool = False,
         "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
         "multi_pod": multi_pod, "bits": bits, "depth": depth,
         "unroll": unroll, "remat": remat, "n_chips": n_chips,
+        "recipe": recipe_path or None,
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "memory": {
             "argument_bytes": mem.argument_size_in_bytes,
@@ -346,6 +356,9 @@ def main(argv=None) -> int:
     p.add_argument("--microbatch", type=int, default=1)
     p.add_argument("--ssm-chunk", type=int, default=0)
     p.add_argument("--kv8", action="store_true")
+    p.add_argument("--recipe", default="",
+                   help="QuantRecipe JSON: lower the cell with the per-site "
+                        "mixed-precision abstract layout")
     p.add_argument("--tag", default="", help="suffix for the output file")
     p.add_argument("--out", default="results/dryrun")
     args = p.parse_args(argv)
@@ -361,13 +374,15 @@ def main(argv=None) -> int:
                      attn_chunk=args.attn_chunk, seq_shard=args.seq_shard,
                      dp_only=args.dp_only, prefill_last=args.prefill_last,
                      microbatch=args.microbatch, ssm_chunk=args.ssm_chunk,
-                     kv8=args.kv8)
+                     kv8=args.kv8, recipe_path=args.recipe or None)
     os.makedirs(args.out, exist_ok=True)
     tag = f"{args.arch}.{args.cell}.{'multi' if args.multi_pod else 'single'}"
     if args.depth:
         tag += f".d{args.depth}{'u' if args.unroll else ''}"
     if args.remat != "full":
         tag += f".{args.remat}"
+    if args.recipe:
+        tag += ".recipe"
     if args.tag:
         tag += f".{args.tag}"
     path = os.path.join(args.out, tag + ".json")

@@ -199,6 +199,36 @@ def quant_task_specs(method: str, axis: str | None = "model",
     return task_leaf_specs(method, axis, lead=lead)
 
 
+def quant_site_specs(sites: dict, shapes_tree=None, mesh=None,
+                     axis: str = "model") -> dict:
+    """Engine-layout PartitionSpecs for every resolved site of a
+    :class:`repro.core.recipe.QuantRecipe`:
+    ``{lin_path: {leaf: PartitionSpec}}`` keyed by the eager param path,
+    skipped sites omitted (their dense ``w`` follows :func:`param_specs`).
+
+    ``sites`` is the ``{path: SiteSpec}`` dict returned by
+    ``QuantRecipe.resolve``.  With ``mesh`` and a ``shapes_tree`` (array
+    or ShapeDtypeStruct pytree holding each site's ``w``), the per-site
+    shard decision reuses the planner's exact gate
+    (``repro.core.batched.bucket_shards`` on the site's column count and
+    method); without them, the replicated layout is returned.  Deployment
+    code uses this to keep a mixed-precision engine output resident
+    without importing engine internals."""
+    from repro.core.batched import bucket_shards, task_leaf_specs
+    from repro.utils import get_path
+    out = {}
+    for path, site in sites.items():
+        if site.skip:
+            continue
+        ax = None
+        if mesh is not None and shapes_tree is not None:
+            n = int(get_path(shapes_tree, path)["w"].shape[-1])
+            if bucket_shards(n, site.method, mesh, axis) > 1:
+                ax = axis
+        out[path] = task_leaf_specs(site.method, ax)
+    return out
+
+
 def to_named(specs_tree, mesh):
     return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs_tree,
                         is_leaf=lambda x: isinstance(x, P))

@@ -135,14 +135,20 @@ def make_decode_step(cfg: ModelConfig, pctx: PContext):
 # ---------------------------------------------------------------------------
 
 
-def abstract_params(cfg: ModelConfig):
+def abstract_params(cfg: ModelConfig, recipe=None):
+    """Abstract (ShapeDtypeStruct) param tree: dense when ``cfg.quant`` is
+    unset, else the quantized layout — per-site when a
+    :class:`repro.core.recipe.QuantRecipe` is given (mixed bit-widths,
+    ranks, skipped-dense sites)."""
+    if recipe is not None:
+        return quantized_param_shapes(cfg, recipe=recipe)
     if cfg.quant is not None:
         return quantized_param_shapes(cfg)
     return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
 
 
-def abstract_state(cfg: ModelConfig, ocfg: OptConfig):
-    pshapes = abstract_params(cfg)
+def abstract_state(cfg: ModelConfig, ocfg: OptConfig, recipe=None):
+    pshapes = abstract_params(cfg, recipe)
     return jax.eval_shape(lambda ps: build_state(ps, ocfg), pshapes)
 
 

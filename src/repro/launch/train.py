@@ -29,7 +29,8 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_smoke_config
-from repro.core.pipeline import quantize_model
+from repro.core.pipeline import quantization_manifest, quantize_model
+from repro.core.recipe import QuantRecipe
 from repro.data import DataConfig, TokenStream
 from repro.launch.steps import build_state, make_train_step
 from repro.models.modules import QSpec
@@ -46,6 +47,10 @@ def parse_args(argv=None):
                    help="reduced config (CPU-runnable)")
     p.add_argument("--method", default="cloq",
                    choices=["cloq", "gptq", "loftq", "qlora", "rtn", "none"])
+    p.add_argument("--recipe", default="",
+                   help="path to a QuantRecipe JSON (per-site mixed-"
+                        "precision plan; overrides --method/--bits/"
+                        "--group-size/--rank/--split)")
     p.add_argument("--bits", type=int, default=4)
     p.add_argument("--group-size", type=int, default=64)
     p.add_argument("--rank", type=int, default=64)
@@ -95,15 +100,26 @@ def main(argv=None) -> int:
         print(f"[pretrain] {args.pretrain_steps} steps, "
               f"loss={float(m0['loss']):.4f}")
 
-    if args.method != "none":
-        qspec = QSpec(bits=args.bits, group_size=args.group_size,
-                      rank=args.rank, method=args.method, split=args.split)
+    recipe = None
+    if args.recipe:
+        recipe = QuantRecipe.load(args.recipe)
+    elif args.method != "none":
+        recipe = QuantRecipe.single(
+            args.method, QSpec(bits=args.bits, group_size=args.group_size,
+                               rank=args.rank, method=args.method,
+                               split=args.split))
+    manifest = None
+    if recipe is not None:
         calib = [stream.next_batch() for _ in range(args.calib_batches)]
         t0 = time.time()
-        params, cfg, _ = quantize_model(params, cfg, calib,
-                                        method=args.method, qspec=qspec)
-        print(f"[quantize] method={args.method} bits={args.bits} "
+        params, cfg, _ = quantize_model(params, cfg, calib, recipe=recipe)
+        print(f"[quantize] {len(recipe.rules)} site rule(s), default "
+              f"{recipe.method}/{recipe.qspec.bits}b "
               f"took {time.time() - t0:.1f}s")
+        # production checkpoints carry the bucket manifest (recipe
+        # included) so restores on any mesh can rebuild per-leaf shardings
+        # without the planner (checkpoint.manager.manifest_shardings)
+        manifest = quantization_manifest(cfg, recipe=recipe)
         trainable = "lora"
     else:
         trainable = "all"
@@ -153,19 +169,21 @@ def main(argv=None) -> int:
                   f"gnorm={float(metrics['grad_norm']):.3f} ({dt * 1e3:.0f}ms)")
         if ckpt is not None:
             ckpt.maybe_save(step + 1, state,
-                            {"data": stream.state_dict(), "step": step + 1})
+                            {"data": stream.state_dict(), "step": step + 1},
+                            manifest=manifest)
         if stop["flag"]:
             print(f"[preempt] signal received — checkpointing at {step + 1}")
             if ckpt is not None:
                 ckpt.maybe_save(step + 1, state,
                                 {"data": stream.state_dict(),
-                                 "step": step + 1}, force=True)
+                                 "step": step + 1}, force=True,
+                                manifest=manifest)
                 ckpt.wait()
             return 0
     if ckpt is not None:
         ckpt.maybe_save(args.steps, state,
                         {"data": stream.state_dict(), "step": args.steps},
-                        force=True)
+                        force=True, manifest=manifest)
         ckpt.wait()
     print("[done]", json.dumps({"final_loss": float(metrics["loss"])}))
     return 0

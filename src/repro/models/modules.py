@@ -48,8 +48,36 @@ def linear_init(key, m: int, n: int, *, dtype=jnp.bfloat16, bias: bool = False,
     return p
 
 
+def packed_bits(mp: int, m: int) -> int:
+    """Bit-width of a packed ``qcodes`` leaf, inferred from its row count
+    (``m`` in-features packed to ``mp`` uint8 rows).  2-/4-bit codes pack
+    4/2 per byte; unpacked rows (3-/8-bit storage) are returned as 8 —
+    ``unpack_codes`` is the identity for both, so dequantization is
+    unambiguous.  Quantized leaves are therefore self-describing: mixed
+    bit-widths (per-site QuantRecipe plans) need no per-layer config at
+    apply time."""
+    if mp * 4 == m:
+        return 2
+    if mp * 2 == m:
+        return 4
+    if mp != m:
+        raise ValueError(f"qcodes rows {mp} do not match in-features {m}")
+    return 8
+
+
+def _group_of(meta: Array, m: int) -> int:
+    """Group size recovered from a (m/g, n) scales/absmax leaf."""
+    return m // meta.shape[-2]
+
+
 def linear_apply(p: dict, x: Array, qspec: QSpec | None = None) -> Array:
-    """y = x @ W (+ LoRA path + bias). W may be dense or packed-quantized."""
+    """y = x @ W (+ LoRA path + bias). W may be dense or packed-quantized.
+
+    Each quantized site dequantizes from its OWN stored shapes (bit-width
+    via :func:`packed_bits`, group size from the scales/absmax rows), so a
+    model quantized with a heterogeneous :class:`repro.core.recipe.
+    QuantRecipe` — 2-bit MLPs next to 4-bit attention — runs with the one
+    global ``qspec`` only gating the Pallas kernel path."""
     record_activation(current_scope(), x)
     m = x.shape[-1]
     if "qcodes" in p:
@@ -57,17 +85,22 @@ def linear_apply(p: dict, x: Array, qspec: QSpec | None = None) -> Array:
         if "absmax" in p:                      # NF4 (QLoRA baseline)
             from repro.core.quantizer import dequantize_nf4
             codes = unpack_codes(p["qcodes"], 4, m)
-            w = dequantize_nf4(codes, p["absmax"], qspec.group_size, x.dtype)
+            w = dequantize_nf4(codes, p["absmax"], _group_of(p["absmax"], m),
+                               x.dtype)
             y = x @ w
-        elif qspec.use_kernel:
-            from repro.kernels import ops as kops
-            y = kops.dequant_matmul(x, p["qcodes"], p["scales"], p["zeros"],
-                                    bits=qspec.bits, group_size=qspec.group_size)
         else:
-            codes = unpack_codes(p["qcodes"], qspec.bits, m)
-            w = dequantize_int(codes, p["scales"], p["zeros"],
-                               qspec.group_size, dtype=x.dtype)
-            y = x @ w
+            bits = packed_bits(p["qcodes"].shape[-2], m)
+            group = _group_of(p["scales"], m)
+            if qspec.use_kernel:
+                from repro.kernels import ops as kops
+                y = kops.dequant_matmul(x, p["qcodes"], p["scales"],
+                                        p["zeros"], bits=bits,
+                                        group_size=group)
+            else:
+                codes = unpack_codes(p["qcodes"], bits, m)
+                w = dequantize_int(codes, p["scales"], p["zeros"],
+                                   group, dtype=x.dtype)
+                y = x @ w
     else:
         y = x @ p["w"].astype(x.dtype)
     if "lora_a" in p:

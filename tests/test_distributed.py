@@ -216,6 +216,129 @@ def test_bucket_manifest_restore_skips_planner():
     """, n_devices=4)
 
 
+def test_mixed_recipe_sharded_parity_and_manifest_restore():
+    """The acceptance scenario of the QuantRecipe redesign, end to end on
+    fake devices: a heterogeneous recipe (2-bit/r8 CLoQ MLPs, 4-bit/r4
+    GPTQ attn.q, 4-bit/r2 RTN rest, mlp.down skipped) quantized by the
+    2-device-sharded engine matches the per-site sequential oracle; its
+    manifest (recipe + heterogeneous bucket specs) is saved with the
+    checkpoint and restored onto a 4-device mesh with per-bucket shardings
+    rebuilt from the manifest alone — planner poisoned, leaves bit-equal,
+    skipped site restored dense."""
+    import textwrap
+    from tests.test_parity_matrix import _MIXED_SRC
+    from tests.util import parity_prelude
+
+    code = (
+        "import jax, jax.numpy as jnp, numpy as np\n"
+        + parity_prelude() + textwrap.dedent(_MIXED_SRC) + """
+import tempfile
+from jax.sharding import Mesh
+from repro.checkpoint import restore_tree, save_tree
+from repro.core.pipeline import quantization_manifest, quantize_model
+from repro.utils import tree_paths
+
+devs = np.array(jax.devices())
+mesh2 = Mesh(devs[:2], ("model",))
+mesh4 = Mesh(devs, ("model",))
+
+cfg, params, calib = mixed_model()
+qp_seq, _, _ = quantize_model(params, cfg, calib, recipe=MIXED_RECIPE,
+                              engine="sequential")
+qp_sh, qcfg, _ = quantize_model(params, cfg, calib, recipe=MIXED_RECIPE,
+                                mesh=mesh2)
+flat_sh, flat_seq = tree_paths(qp_sh), tree_paths(qp_seq)
+assert_mixed_trees_close(flat_sh, flat_seq, assert_leaves_close)
+print("PARITY OK mixed sharded")
+
+man = quantization_manifest(qcfg, recipe=MIXED_RECIPE, mesh=mesh2)
+assert man["recipe"]["rules"], "manifest must carry the recipe"
+sigs = {(b["spec"]["method"], b["spec"]["bits"], b["spec"]["rank"])
+        for b in man["buckets"]}
+assert len(sigs) >= 3, sigs
+d = tempfile.mkdtemp()
+save_tree(qp_sh, d, 1, manifest=man)
+
+# restoring from the manifest must never touch the planner
+import repro.core.batched as batched
+def poisoned(*a, **k):
+    raise AssertionError("planner called during manifest restore")
+batched.plan_buckets = poisoned
+
+tree, meta = restore_tree(d, mesh=mesh4)
+ft = tree_paths(tree)
+assert set(ft) == set(flat_sh)
+n_sharded = 0
+for p, leaf in ft.items():
+    np.testing.assert_array_equal(np.asarray(leaf),
+                                  np.asarray(flat_sh[p]), err_msg=p)
+    if hasattr(leaf, "sharding") and not leaf.sharding.is_fully_replicated:
+        n_sharded += 1
+assert n_sharded > 0, "no leaf came back sharded on the 4-device mesh"
+assert "blocks.mlp.down.w" in ft          # skipped site restored dense
+print("MANIFEST RESTORE OK", n_sharded, "sharded leaves")
+""")
+    out = run_with_devices(code, n_devices=4, timeout=900).stdout
+    assert "PARITY OK mixed sharded" in out
+    assert "MANIFEST RESTORE OK" in out
+
+
+def test_site_lora_manifest_restore():
+    """The weight-shared block's per-site adapter stacks
+    (shared.site_lora.<name>.lora_a/lora_b) are covered by the bucket
+    manifest: restore_tree(mesh=) lays them out on the new mesh straight
+    from the manifest — lora_b column-sharded (engine layout, extra
+    unsharded site dim), lora_a replicated — without re-running
+    launch.shardings.param_specs (ROADMAP PR-3 follow-up)."""
+    run_with_devices("""
+        import tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.checkpoint import restore_tree, save_tree
+        from repro.core.pipeline import quantization_manifest, quantize_model
+        from repro.core.recipe import QuantRecipe
+        from repro.data import DataConfig, TokenStream
+        from repro.models.modules import QSpec
+        from repro.models.transformer import ModelConfig, init_params
+        from repro.utils import tree_paths
+
+        devs = np.array(jax.devices())
+        mesh2 = Mesh(devs[:2], ("model",))
+        mesh4 = Mesh(devs, ("model",))
+
+        cfg = ModelConfig(name="t", family="hybrid", n_layers=4, d_model=32,
+                          vocab=128, n_heads=4, n_kv_heads=4, head_dim=8,
+                          d_ff=64, ssm_state=16, ssm_head_dim=16,
+                          ssm_groups=2, ssm_chunk=8, hybrid_attn_every=2,
+                          hybrid_window=16, dtype=jnp.float32)
+        recipe = QuantRecipe.single(
+            "cloq", QSpec(bits=2, group_size=16, rank=8))
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        ds = TokenStream(DataConfig(vocab=128, seq_len=32, global_batch=2,
+                                    seed=3))
+        qp, qcfg, _ = quantize_model(params, cfg, [ds.next_batch()],
+                                     recipe=recipe, mesh=mesh2)
+        man = quantization_manifest(qcfg, recipe=recipe, mesh=mesh2)
+        assert man["site_lora"], "manifest must record the shared sites"
+        names = {e["name"] for e in man["site_lora"]}
+        assert "attn_q" in names and "mlp_down" in names, names
+
+        d = tempfile.mkdtemp()
+        save_tree(qp, d, 1, manifest=man)
+        tree, meta = restore_tree(d, mesh=mesh4)
+        sl = tree["shared"]["site_lora"]
+        assert set(sl) == names, (set(sl), names)
+        for name, sub in sl.items():
+            assert not sub["lora_b"].sharding.is_fully_replicated, name
+            assert sub["lora_a"].sharding.is_fully_replicated, name
+        flat, want = tree_paths(tree), tree_paths(qp)
+        for p in flat:
+            np.testing.assert_array_equal(np.asarray(flat[p]),
+                                          np.asarray(want[p]), err_msg=p)
+        print("SITE-LORA RESTORE OK", sorted(names))
+    """, n_devices=4, timeout=900)
+
+
 def test_dryrun_cell_entrypoint_small():
     """The dryrun module itself (512 fake devices) on the smallest cell."""
     run_with_devices("""

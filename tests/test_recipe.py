@@ -1,0 +1,205 @@
+"""QuantRecipe resolution semantics + the quantize_model back-compat shim.
+
+Resolution is pure (no devices): first-match-wins over ordered rules, skip
+rules, unmatched-path default fallback, QSpec field inheritance, and the
+JSON round-trip that ``train --recipe plan.json`` relies on.  The shim
+tests are the one place allowed to touch the legacy ``(method=, qspec=)``
+kwargs deliberately: they must keep working, warn, and produce leaves
+identical to the equivalent zero-rule recipe.
+"""
+import dataclasses
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.recipe import METHODS, QuantRecipe, SiteRule, SiteSpec
+from repro.models.modules import QSpec
+
+DEFAULT = QSpec(bits=4, group_size=16, rank=8)
+
+
+def test_unmatched_path_falls_through_to_default():
+    r = QuantRecipe(rules=(SiteRule("*.mlp.*", bits=2),),
+                    method="cloq", qspec=DEFAULT)
+    s = r.resolve_one("blocks.0.attn.q")
+    assert s == SiteSpec("cloq", dataclasses.replace(DEFAULT, method="cloq"))
+    assert not s.skip
+
+
+def test_first_match_wins_over_later_rules():
+    r = QuantRecipe(rules=(SiteRule("blocks.0.*", bits=2, rank=32),
+                           SiteRule("*.mlp.*", bits=8, rank=2)),
+                    qspec=DEFAULT)
+    # both patterns match blocks.0.mlp.up; the FIRST rule decides
+    s = r.resolve_one("blocks.0.mlp.up")
+    assert (s.qspec.bits, s.qspec.rank) == (2, 32)
+    # the second rule still governs paths only it matches
+    assert r.resolve_one("blocks.1.mlp.up").qspec.bits == 8
+
+
+def test_skip_rule_wins_and_shadows():
+    r = QuantRecipe(rules=(SiteRule("*.head", skip=True),
+                           SiteRule("*", bits=2)),
+                    qspec=DEFAULT)
+    assert r.resolve_one("blocks.0.head").skip
+    assert not r.resolve_one("blocks.0.attn.q").skip
+
+
+def test_overrides_inherit_unset_fields():
+    r = QuantRecipe(rules=(SiteRule("*.attn.*", method="gptq", rank=4),),
+                    method="cloq", qspec=DEFAULT)
+    s = r.resolve_one("blocks.3.attn.o")
+    assert s.method == "gptq"
+    assert s.qspec.rank == 4
+    # unset fields inherit the recipe default
+    assert s.qspec.bits == DEFAULT.bits
+    assert s.qspec.group_size == DEFAULT.group_size
+    # the resolved qspec's method field tracks the resolved method
+    assert s.qspec.method == "gptq"
+
+
+def test_regex_rule():
+    r = QuantRecipe(rules=(SiteRule(r"blocks\.[02]\.mlp\.", bits=2,
+                                    regex=True),), qspec=DEFAULT)
+    assert r.resolve_one("blocks.0.mlp.up").qspec.bits == 2
+    assert r.resolve_one("blocks.1.mlp.up").qspec.bits == DEFAULT.bits
+
+
+def test_resolve_covers_every_path_once():
+    r = QuantRecipe(rules=(SiteRule("*.mlp.*", bits=2),), qspec=DEFAULT)
+    paths = ["blocks.0.attn.q", "blocks.0.mlp.up", "shared.block.mlp.down"]
+    sites = r.resolve(paths)
+    assert set(sites) == set(paths)
+    assert sites["blocks.0.mlp.up"].qspec.bits == 2
+    assert sites["blocks.0.attn.q"].qspec.bits == DEFAULT.bits
+
+
+def test_unknown_method_rejected_at_construction():
+    with pytest.raises(ValueError):
+        QuantRecipe(method="nope")
+    with pytest.raises(ValueError):
+        QuantRecipe(rules=(SiteRule("*", method="nope"),))
+    assert set(METHODS) == {"cloq", "gptq", "loftq", "qlora", "rtn"}
+
+
+def test_json_round_trip():
+    r = QuantRecipe(rules=(SiteRule("*.mlp.*", method="cloq", bits=2,
+                                    rank=32),
+                           SiteRule(r"head$", skip=True, regex=True),
+                           SiteRule("*.attn.*", bits=4, group_size=32)),
+                    method="rtn", qspec=DEFAULT)
+    j = r.to_json()
+    json.loads(j)                       # valid JSON
+    r2 = QuantRecipe.from_json(j)
+    assert r2 == r
+    # and resolution semantics survive, not just equality
+    for p in ("blocks.0.mlp.up", "blocks.0.attn.q", "head", "embed"):
+        assert r2.resolve_one(p) == r.resolve_one(p)
+
+
+def test_load_from_file(tmp_path):
+    r = QuantRecipe(rules=(SiteRule("*.mlp.*", bits=2),), qspec=DEFAULT)
+    f = tmp_path / "plan.json"
+    f.write_text(r.to_json())
+    assert QuantRecipe.load(str(f)) == r
+
+
+def test_from_dict_accepts_rule_dicts():
+    r = QuantRecipe.from_dict({"rules": [{"pattern": "*.mlp.*", "bits": 2}],
+                               "qspec": {"bits": 4, "rank": 8}})
+    assert r.resolve_one("a.mlp.b").qspec.bits == 2
+    assert r.resolve_one("a.attn.b").qspec.bits == 4
+
+
+# ---------------------------------------------------------------------------
+# The quantize_model shim: legacy (method=, qspec=) == zero-rule recipe,
+# with a DeprecationWarning.  This is the shim's own test — the only place
+# that needs to know about the deprecation.
+# ---------------------------------------------------------------------------
+
+
+def _tiny_setup():
+    from repro.data import DataConfig, TokenStream
+    from repro.models.transformer import ModelConfig, init_params
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=16,
+                      vocab=64, n_heads=2, n_kv_heads=2, d_ff=32,
+                      dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ds = TokenStream(DataConfig(vocab=64, seq_len=16, global_batch=2,
+                                seed=5))
+    return cfg, params, [ds.next_batch()]
+
+
+def test_shim_warns_and_matches_recipe_path():
+    from repro.core.pipeline import quantize_model
+    cfg, params, calib = _tiny_setup()
+    qspec = QSpec(bits=4, group_size=16, rank=4)
+    with pytest.warns(DeprecationWarning):
+        qp_old, cfg_old, _ = quantize_model(params, cfg, calib,
+                                            method="rtn", qspec=qspec)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        qp_new, cfg_new, _ = quantize_model(
+            params, cfg, calib, recipe=QuantRecipe.single("rtn", qspec))
+    from repro.utils import tree_paths
+    old, new = tree_paths(qp_old), tree_paths(qp_new)
+    assert set(old) == set(new)
+    for k in old:
+        np.testing.assert_array_equal(np.asarray(old[k]),
+                                      np.asarray(new[k]), err_msg=k)
+    assert cfg_old.quant == cfg_new.quant == qspec
+
+
+def test_depth_varying_recipe_rejected_under_scan_stacking():
+    """A rule that gives layers of one scan-stacked container different
+    specs (here: skip only block 0) cannot re-stack — quantize_model must
+    reject it at plan time with a clear error, before calibration."""
+    from repro.core.pipeline import quantize_model
+    from repro.data import DataConfig, TokenStream
+    from repro.models.transformer import ModelConfig, init_params
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=16,
+                      vocab=64, n_heads=2, n_kv_heads=2, d_ff=32,
+                      dtype=jnp.float32)
+    assert cfg.scan_layers
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ds = TokenStream(DataConfig(vocab=64, seq_len=16, global_batch=2,
+                                seed=5))
+    calib = [ds.next_batch()]
+    r = QuantRecipe(rules=(SiteRule("blocks.0.*", skip=True),),
+                    qspec=DEFAULT)
+    with pytest.raises(ValueError, match="scan-stacked"):
+        quantize_model(params, cfg, calib, recipe=r)
+    # the same plan is legal on an unstacked config
+    ucfg = dataclasses.replace(cfg, scan_layers=False)
+    uparams = init_params(jax.random.PRNGKey(0), ucfg)
+    qp, _, _ = quantize_model(uparams, ucfg, calib, recipe=r)
+    from repro.utils import tree_paths
+    flat = tree_paths(qp)
+    assert "blocks.0.attn.q.w" in flat              # skipped: dense
+    assert "blocks.0.attn.q.qcodes" not in flat
+
+
+def test_recipe_plus_legacy_kwargs_is_an_error():
+    from repro.core.pipeline import quantize_model
+    cfg, params, calib = _tiny_setup()
+    with pytest.raises(ValueError):
+        quantize_model(params, cfg, calib,
+                       recipe=QuantRecipe(qspec=DEFAULT), method="rtn")
+
+
+def test_manifest_accepts_legacy_and_recipe_forms():
+    from repro.core.pipeline import quantization_manifest
+    cfg, _, _ = _tiny_setup()
+    qspec = QSpec(bits=4, group_size=16, rank=4)
+    legacy = quantization_manifest(cfg, "rtn", qspec)
+    via_recipe = quantization_manifest(
+        cfg, recipe=QuantRecipe.single("rtn", qspec))
+    assert legacy["buckets"] == via_recipe["buckets"]
+    assert via_recipe["recipe"]["method"] == "rtn"
+    with pytest.raises(ValueError):
+        quantization_manifest(cfg, "rtn", qspec,
+                              recipe=QuantRecipe(qspec=DEFAULT))
