@@ -34,7 +34,8 @@ def main(argv=None) -> None:
         ("table9_seqlen", table9_seqlen.run,
          lambda r: f"longer_no_worse={r['claim_longer_no_worse']}"),
         ("table10_init_cost", table10_init_cost.run,
-         lambda r: f"ratio={r['rows'][-1]['ratio']}"),
+         lambda r: (f"ratio={r['rows'][-1]['ratio']},auto_beats_uniform="
+                    f"{r['auto_alloc_row']['auto_beats_uniform']}")),
         ("kernel_bench", kernel_bench.run,
          lambda r: f"kernels={len(r['rows'])}"),
     ]

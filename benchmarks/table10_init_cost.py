@@ -135,6 +135,85 @@ def _mixed_recipe_row(rng, n_layers: int = 8) -> dict:
             "speedup": round(t_seq / t_mix, 2)}
 
 
+def _auto_alloc_row(rng, n_layers: int = 8) -> dict:
+    """Bit-allocation sweep cost + plan quality.
+
+    Wall-clock: the vmapped sensitivity sweep (one fused eval bucket per
+    ``(shape x candidate)`` slab, ``batched.evaluate_layer_batch``) vs the
+    per-candidate sequential loop (one ``_quantize_one`` + proxy-error
+    computation per site x candidate).  Quality: total proxy error of the
+    auto-allocated plan vs the uniform-bit plan at the SAME byte budget
+    (budget = the uniform plan's exact bytes)."""
+    from repro.core.allocate import (budget_curve, default_grid, emit_recipe,
+                                     group_sites, site_bytes, solve_budget,
+                                     sweep_sensitivity)
+    from repro.core.batched import evaluate_layer_batch
+    from repro.core.quantizer import dequantize_int, unpack_codes
+    from repro.core.recipe import SiteSpec
+
+    base = QSpec(bits=4, group_size=16, rank=8)
+    grid = default_grid(bits=(2, 3, 4), methods=("cloq",), ranks=(0, 8))
+    dims = {"mlp": (64, 128), "attn": (64, 64)}
+    paths = ([f"blocks.{i}.mlp.up" for i in range(n_layers)] +
+             [f"blocks.{i}.attn.q" for i in range(n_layers)])
+    keys = jax.random.split(jax.random.PRNGKey(0), len(paths))
+    tasks, meta = [], {}
+    for p, k in zip(paths, keys):
+        m, n = dims["mlp" if ".mlp." in p else "attn"]
+        W = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        X = rng.normal(size=(1024, m)).astype(np.float32)
+        tasks.append(LayerTask(p, None, W, jnp.asarray(X.T @ X), k))
+        meta[p] = (m, n, 1, 1)
+
+    def groups():
+        return group_sites(meta, ("blocks",))
+
+    def vmapped():
+        return sweep_sensitivity(tasks, groups(), grid, base, jnp.float32)
+
+    def per_candidate():
+        errs = []
+        for t in tasks:
+            for method, bits, rank in grid:
+                q = QSpec(bits=bits, group_size=16, rank=rank, method=method)
+                out = _quantize_one(t.W, t.H, q, method, t.key)
+                codes = unpack_codes(out["qcodes"], bits, t.W.shape[0])
+                Qd = dequantize_int(codes, out["scales"], out["zeros"], 16)
+                E = t.W - Qd - out["lora_a"] @ out["lora_b"].T
+                errs.append(jnp.einsum("ij,ik,kj->", E, t.H, E))
+        jax.block_until_ready(errs[-1])
+        return errs
+
+    swept = vmapped()
+    per_candidate()                # compile both before timing
+    t_vmap, t_seq = _best_of(vmapped), _best_of(per_candidate)
+
+    # plan quality at equal budget: uniform INT3/r8 vs the auto allocation
+    uni = SiteSpec("cloq", QSpec(bits=3, group_size=16, rank=8))
+    budget = sum(len(g.paths) * site_bytes(g.m, g.n, uni, jnp.float32)
+                 for g in swept)
+    uni_err = sum(
+        e for t, e in zip(
+            tasks, evaluate_layer_batch(
+                [LayerTask(t.path, None, t.W, t.H, t.key, site=uni)
+                 for t in tasks])))
+    choice = solve_budget(swept, budget)
+    auto_bytes = sum(g.bytes_[c] for g, c in zip(swept, choice))
+    auto_err = sum(g.errors[c] for g, c in zip(swept, choice))
+    recipe = emit_recipe(swept, choice, base)
+    return {"n_sites": len(tasks), "n_candidates": len(grid),
+            "sequential_sweep_s": round(t_seq, 3),
+            "vmapped_sweep_s": round(t_vmap, 3),
+            "speedup": round(t_seq / t_vmap, 2),
+            "budget_bytes": budget,
+            "uniform_int3_err": round(float(uni_err), 3),
+            "auto_bytes": auto_bytes,
+            "auto_err": round(float(auto_err), 3),
+            "auto_beats_uniform": bool(auto_err < uni_err),
+            "n_rules": len(recipe.rules),
+            "curve_points": len(budget_curve(swept))}
+
+
 # Distributed-engine comparison, run in a subprocess so we control the fake
 # device count regardless of how the parent process initialized jax.
 _SHARDED_SNIPPET = """
@@ -306,6 +385,15 @@ def run() -> dict:
           f"mixed={mixed['mixed_batched_s']}s ({mixed['speedup']}x)",
           flush=True)
 
+    auto = _auto_alloc_row(rng)
+    print(f"  auto alloc ({auto['n_sites']} sites x "
+          f"{auto['n_candidates']} candidates): "
+          f"seq={auto['sequential_sweep_s']}s "
+          f"vmapped={auto['vmapped_sweep_s']}s ({auto['speedup']}x); "
+          f"uniform-int3 err={auto['uniform_int3_err']} vs "
+          f"auto err={auto['auto_err']} at {auto['budget_bytes']} B",
+          flush=True)
+
     lq = _sharded_bucket_row(64, 64, 16, snippet=_LOFTQ_SHARDED_SNIPPET)
     if "error" in lq:
         print(f"  loftq sharded bucket: failed {lq['error']}", flush=True)
@@ -320,6 +408,7 @@ def run() -> dict:
            "batched_speedup_best": max(r["speedup"] for r in batched_rows),
            "sharded_rows": sharded_rows,
            "mixed_recipe_row": mixed,
+           "auto_alloc_row": auto,
            "loftq_sharded_row": lq,
            "note": ("paper Table 10: comparable runtimes; CLoQ trades "
                     "LoftQ's 5 SVD iterations for OPTQ+2 SVDs.  batched_s: "

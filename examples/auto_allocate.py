@@ -1,0 +1,83 @@
+"""Deriving a mixed-precision plan under a byte budget.
+
+    PYTHONPATH=src python examples/auto_allocate.py
+
+`examples/mixed_recipe.py` *writes* a QuantRecipe by hand; this example
+*derives* one.  The calibrated bit-allocation subsystem
+(`repro.core.allocate`) sweeps every quantization site over a candidate
+grid — scoring each candidate with the Gram-weighted proxy error
+`tr(Eᵀ H E)`, `E = W − Q − A Bᵀ`, through the same fused `jit(vmap)`
+bucket engine that executes quantization — then solves a budgeted
+knapsack for the minimum-error plan.
+
+The comparison: a uniform INT3 plan vs the auto-allocated plan at the
+SAME byte budget.  (In this repo 3-bit codes are stored unpacked — one
+byte per code — so uniform INT3 is a genuinely wasteful plan the solver
+should beat by spending the same bytes on packed INT2/INT4 + calibrated
+adapters where they help most.)
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline import (allocate_plan, quantize_model,
+                                 recipe_plan_bytes, run_calibration,
+                                 to_eager_params)
+from repro.core.recipe import QuantRecipe
+from repro.data import DataConfig, TokenStream
+from repro.launch.steps import build_state, make_train_step
+from repro.models.modules import QSpec
+from repro.models.parallel import LOCAL
+from repro.models.transformer import ModelConfig, init_params
+from repro.optim import OptConfig
+
+cfg = ModelConfig(name="alloc-demo", family="dense", n_layers=2, d_model=32,
+                  vocab=256, n_heads=4, n_kv_heads=2, d_ff=64,
+                  dtype=jnp.float32)
+params = init_params(jax.random.PRNGKey(0), cfg)
+data = TokenStream(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4,
+                              seed=0))
+calib = [data.next_batch() for _ in range(4)]
+
+# Calibrate ONCE; the GramStore is reused by both allocations below.
+store = run_calibration(to_eager_params(params, cfg), cfg, calib)
+
+# 1. The baseline plan: uniform INT3, rank-8 everywhere.  Its exact
+#    serialized size defines the budget.
+base = QSpec(bits=4, group_size=16, rank=8)
+uniform = QuantRecipe.single("cloq", QSpec(bits=3, group_size=16, rank=8))
+budget = recipe_plan_bytes(cfg, uniform)
+print(f"uniform INT3/r8 plan: {budget} B -> that is the budget")
+
+# 2. Score the uniform plan with the allocator's own proxy (a one-candidate
+#    "grid" forces the uniform choice), then solve the real grid.
+uni_alloc = allocate_plan(params, cfg, store, budget,
+                          grid=(("cloq", 3, 8),), qspec=base)
+t0 = time.time()
+grid = tuple((m, b, r) for m in ("cloq",) for b in (2, 3, 4)
+             for r in (0, 8, 16))
+alloc = allocate_plan(params, cfg, store, budget, grid=grid, qspec=base,
+                      progress=print)
+print(f"swept {len(grid)} candidates/site in {time.time() - t0:.1f}s")
+print(alloc.summary())
+print(f"uniform INT3: {uni_alloc.total_bytes} B, "
+      f"proxy error {uni_alloc.total_error:.4g}")
+print(f"auto plan:    {alloc.total_bytes} B, "
+      f"proxy error {alloc.total_error:.4g} "
+      f"({uni_alloc.total_error / alloc.total_error:.1f}x lower at the "
+      "same budget)")
+assert alloc.total_bytes <= budget
+assert alloc.total_error < uni_alloc.total_error
+
+# 3. The emitted recipe is a first-class plan: quantize and LoRA-finetune.
+qparams, qcfg, _ = quantize_model(params, cfg, calib, recipe=alloc.recipe)
+ocfg = OptConfig(lr=1e-3, trainable="lora", total_steps=20,
+                 schedule="cosine")
+state = build_state(qparams, ocfg)
+step = jax.jit(make_train_step(qcfg, ocfg, LOCAL))
+for i in range(20):
+    state, metrics = step(state, data.next_batch())
+    if i % 10 == 0 or i == 19:
+        print(f"finetune step {i}: loss {float(metrics['loss']):.3f}")
+print("done: auto-allocated mixed-precision plan trained end to end")

@@ -69,7 +69,8 @@ from repro.core.loftq import loftq_init, qlora_init
 from repro.core.magr import magr_preprocess
 from repro.core.optq import (optq_quantize_core, optq_quantize_sharded,
                              pick_block)
-from repro.core.quantizer import QuantConfig, pack_codes, quantize_int
+from repro.core.quantizer import (QuantConfig, dequantize_int, pack_codes,
+                                  quantize_int)
 
 Array = jax.Array
 
@@ -155,13 +156,19 @@ def task_site(t: LayerTask, qspec=None, method: str | None = None):
 
 def make_spec(m: int, n: int, qspec, method: str, has_gram: bool,
               base: QuantConfig | None = None, *, mesh=None,
-              axis: str = "model") -> BucketSpec:
+              axis: str = "model", for_eval: bool = False) -> BucketSpec:
     """Resolve all static/branching decisions for one (shape, method).
 
     With ``mesh``, the bucket's column-shard count over ``axis`` is also
     resolved here (see :func:`bucket_shards`), so the executor's choice of
     :func:`run_bucket` vs :func:`run_bucket_sharded` is a pure plan-time
-    lookup."""
+    lookup.
+
+    ``for_eval`` marks a *sensitivity-sweep* bucket
+    (:func:`evaluate_layer_batch`): the calibration Gram is then routed
+    into the bucket whenever one exists — every candidate's proxy error
+    ``tr(E^T H E)`` is weighted by the same calibration data, even for
+    methods whose quantization itself is data-free."""
     base = base or QuantConfig(bits=qspec.bits, group_size=qspec.group_size)
     return BucketSpec(
         m=m, n=n, method=method, bits=qspec.bits,
@@ -170,7 +177,7 @@ def make_spec(m: int, n: int, qspec, method: str, has_gram: bool,
         act_order=base.act_order, lambda_frac=base.lambda_frac,
         magr=(method == "cloq" and qspec.bits <= 4),
         magr_iters=base.magr_iters,
-        has_gram=has_gram and method in GRAM_METHODS,
+        has_gram=has_gram and (for_eval or method in GRAM_METHODS),
         n_shards=bucket_shards(n, method, mesh, axis))
 
 
@@ -191,9 +198,20 @@ def spec_qcfg(spec: BucketSpec) -> QuantConfig:
 
 def quantize_single(W: Array, H: Array | None, key: Array,
                     spec: BucketSpec, axis: str | None = None) -> dict:
+    """Traced single-layer core (host-sync free): the leaf dict of
+    :func:`quantize_single_deq` (see there for the full contract)."""
+    return quantize_single_deq(W, H, key, spec, axis)[0]
+
+
+def quantize_single_deq(W: Array, H: Array | None, key: Array,
+                        spec: BucketSpec,
+                        axis: str | None = None) -> tuple[dict, Array]:
     """Traced single-layer core (host-sync free).  Mirrors the sequential
     ``pipeline._quantize_one`` but with every static decision pre-resolved
-    in ``spec`` — safe under ``jax.vmap``.
+    in ``spec`` — safe under ``jax.vmap``.  Returns ``(leaves, Qd)`` where
+    ``Qd`` is the dequantized base — the quantity the sensitivity sweep
+    (:func:`eval_single`) measures the residual against without a second
+    unpack round-trip.
 
     Args:
         W:    (m, n_local) weight — the full layer when ``axis`` is None, or
@@ -231,31 +249,59 @@ def quantize_single(W: Array, H: Array | None, key: Array,
             A, B = cloq_lowrank_local(R, Rinv, W - Qd, spec.rank,
                                       spec.split, axis)
         return {"qcodes": pack_codes(Qc, spec.bits), "scales": s, "zeros": z,
-                "lora_a": A, "lora_b": B}
+                "lora_a": A, "lora_b": B}, Qd
     if spec.method == "gptq":
         Qd, Qc, s, z = optq_quantize_core(W, jnp.asarray(H, jnp.float32),
                                           qcfg)
         A = jax.random.normal(key, (m, spec.rank), jnp.float32) / np.sqrt(m)
         B = jnp.zeros((n, spec.rank), jnp.float32)
         return {"qcodes": pack_codes(Qc, spec.bits), "scales": s, "zeros": z,
-                "lora_a": A, "lora_b": B}
+                "lora_a": A, "lora_b": B}, Qd
     if spec.method == "loftq":
         Qd, A, B, qstate = loftq_init(W, qcfg, spec.rank, iters=5, axis=axis)
         codes, s, z = qstate
         return {"qcodes": pack_codes(codes, spec.bits), "scales": s,
-                "zeros": z, "lora_a": A, "lora_b": B}
+                "zeros": z, "lora_a": A, "lora_b": B}, Qd
     if spec.method == "qlora":
         Qd, A, B, qstate = qlora_init(W, qcfg, spec.rank, key)
         codes, absmax = qstate
         return {"qcodes": pack_codes(codes, 4), "absmax": absmax,
-                "lora_a": A, "lora_b": B}
+                "lora_a": A, "lora_b": B}, Qd
     if spec.method == "rtn":
         codes, s, z = quantize_int(W, spec.bits, spec.group_size)
+        Qd = dequantize_int(codes, s, z, spec.group_size)
         A = jax.random.normal(key, (m, spec.rank), jnp.float32) / np.sqrt(m)
         B = jnp.zeros((n, spec.rank), jnp.float32)
         return {"qcodes": pack_codes(codes, spec.bits), "scales": s,
-                "zeros": z, "lora_a": A, "lora_b": B}
+                "zeros": z, "lora_a": A, "lora_b": B}, Qd
     raise ValueError(f"unknown method {spec.method}")
+
+
+def eval_single(W: Array, H: Array | None, key: Array, spec: BucketSpec,
+                axis: str | None = None) -> Array:
+    """Traced single-candidate *sensitivity* core: the calibration-weighted
+    proxy error of quantizing this site with ``spec``,
+
+        err = tr(E^T H E),    E = W - Q - A B^T
+
+    (PAPER.md §3's layer-wise discrepancy ``||X E||_F^2`` written through
+    the Gram ``H = X^T X`` — no calibration activations materialized).
+    Falls back to the unweighted ``||E||_F^2`` when the bucket carries no
+    Gram.  Runs the very same quantization stack as
+    :func:`quantize_single_deq`, so the error ranks exactly what the
+    engine would produce.  Under ``shard_map`` (``axis`` given) the
+    per-column contributions ``e_j^T H e_j`` are shard-local given the
+    replicated Gram; one scalar psum recovers the total."""
+    leaves, Qd = quantize_single_deq(W, H, key, spec, axis)
+    W = jnp.asarray(W, jnp.float32)
+    E = W - Qd - leaves["lora_a"] @ leaves["lora_b"].T
+    if spec.has_gram:
+        err = jnp.einsum("ij,ik,kj->", E, jnp.asarray(H, jnp.float32), E)
+    else:
+        err = jnp.sum(E * E)
+    if axis is not None:
+        err = jax.lax.psum(err, axis)
+    return err
 
 
 @partial(jax.jit, static_argnames=("spec",))
@@ -280,6 +326,57 @@ def run_bucket(Ws: Array, Hs: Array | None, keys: Array,
             lambda W, k: quantize_single(W, None, k, spec))(Ws, keys)
     return jax.vmap(
         lambda W, H, k: quantize_single(W, H, k, spec))(Ws, Hs, keys)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def run_bucket_eval(Ws: Array, Hs: Array | None, keys: Array,
+                    spec: BucketSpec) -> Array:
+    """Sensitivity-sweep analog of :func:`run_bucket`: one compiled
+    executable per ``(shape, candidate-spec)`` slab, vmapping
+    :func:`eval_single` over the stacked layers.  Returns the ``(L,)``
+    proxy errors — the whole candidate evaluation for a bucket costs one
+    trace and one dispatch, never a per-candidate Python loop."""
+    if Hs is None:
+        return jax.vmap(
+            lambda W, k: eval_single(W, None, k, spec))(Ws, keys)
+    return jax.vmap(
+        lambda W, H, k: eval_single(W, H, k, spec))(Ws, Hs, keys)
+
+
+@lru_cache(maxsize=64)
+def _sharded_eval_executable(spec: BucketSpec, mesh, axis: str):
+    """Compiled shard_map(vmap(eval_single)) for one (spec, mesh) pair —
+    the sweep's distributed path: each device quantizes + scores its
+    column shard, one scalar-per-layer psum totals the proxy errors."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if spec.has_gram:
+        def local(Ws_l, Hs_l, keys_l):
+            return jax.vmap(lambda W, H, k: eval_single(
+                W, H, k, spec, axis=axis))(Ws_l, Hs_l, keys_l)
+        in_specs = (P(None, None, axis), P(None, None, None), P(None, None))
+    else:
+        def local(Ws_l, keys_l):
+            return jax.vmap(lambda W, k: eval_single(
+                W, None, k, spec, axis=axis))(Ws_l, keys_l)
+        in_specs = (P(None, None, axis), P(None, None))
+
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=P(None))
+    return jax.jit(fn)
+
+
+def run_bucket_eval_sharded(Ws: Array, Hs: Array | None, keys: Array,
+                            spec: BucketSpec, mesh,
+                            axis: str = "model") -> Array:
+    """Distributed :func:`run_bucket_eval`: ``shard_map`` over ``axis``
+    (same planner gate as :func:`run_bucket_sharded` — ``spec.n_shards >
+    1`` only when ``n`` divides the axis).  Returns replicated ``(L,)``
+    proxy errors."""
+    fn = _sharded_eval_executable(spec, mesh, axis)
+    if spec.has_gram:
+        return fn(Ws, Hs, keys)
+    return fn(Ws, keys)
 
 
 def task_leaf_specs(method: str, axis: str | None = "model",
@@ -408,7 +505,8 @@ def per_layer_sharded_dispatch(tasks: list[LayerTask], qspec, mesh,
 
 def plan_buckets(tasks: list[LayerTask], qspec=None, method: str | None = None,
                  base: QuantConfig | None = None, *, mesh=None,
-                 axis: str = "model") -> dict[BucketSpec, list[int]]:
+                 axis: str = "model",
+                 for_eval: bool = False) -> dict[BucketSpec, list[int]]:
     """Group task indices by executable signature (insertion-ordered).
 
     Args:
@@ -426,6 +524,10 @@ def plan_buckets(tasks: list[LayerTask], qspec=None, method: str | None = None,
                 via :func:`run_bucket_sharded`; the rest fall back to the
                 replicated :func:`run_bucket`.
         axis:   mesh axis name for column sharding.
+        for_eval: plan *sensitivity-sweep* buckets
+                (:func:`evaluate_layer_batch`): route each task's Gram into
+                its bucket whenever present so every candidate's proxy
+                error is calibration-weighted (see :func:`make_spec`).
 
     Returns an insertion-ordered ``{BucketSpec: [task indices]}``."""
     buckets: dict[BucketSpec, list[int]] = {}
@@ -438,7 +540,7 @@ def plan_buckets(tasks: list[LayerTask], qspec=None, method: str | None = None,
                 f"method {t_method!r} needs a calibration Gram for {t.path}"
                 f"{'' if t.expert is None else f'[expert {t.expert}]'}")
         spec = make_spec(m, n, t_qspec, t_method, has_gram, base,
-                         mesh=mesh, axis=axis)
+                         mesh=mesh, axis=axis, for_eval=for_eval)
         buckets.setdefault(spec, []).append(i)
     return buckets
 
@@ -550,4 +652,64 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
             jax.block_until_ready(out)           # serialize (oracle mode)
         for j, i in enumerate(idxs):
             results[i] = {k: v[j] for k, v in out.items()}
+    return results
+
+
+def evaluate_layer_batch(tasks: list[LayerTask],
+                         base: QuantConfig | None = None,
+                         progress: Callable[[str], None] | None = None,
+                         *, mesh=None, axis: str = "model",
+                         stream: bool = True) -> list[float]:
+    """Proxy error ``tr(E^T H E)`` of every task, bucket-by-bucket — the
+    execution engine of the bit-allocation sensitivity sweep
+    (:mod:`repro.core.allocate`).
+
+    Tasks carry their *candidate* :class:`~repro.core.recipe.SiteSpec` in
+    ``LayerTask.site``; the planner (``for_eval=True``) groups them into
+    ``(shape, candidate-spec)`` slabs, each evaluated by ONE
+    ``jit(vmap)`` executable (:func:`run_bucket_eval`) — so sweeping a
+    C-candidate grid over an N-site model dispatches per *bucket*, not per
+    ``site x candidate``.  With ``mesh``, divisible buckets ride the
+    sharded Gram-trick path (:func:`run_bucket_eval_sharded`); streaming
+    double-buffers host staging exactly like :func:`quantize_layer_batch`.
+
+    Returns one Python float per task, in task order."""
+    buckets = plan_buckets(tasks, base=base, mesh=mesh, axis=axis,
+                           for_eval=True)
+    results: list[float | None] = [None] * len(tasks)
+    items = list(buckets.items())
+    pending: list[tuple[list[int], Array]] = []
+
+    def dispatch(b: int, staged):
+        spec, idxs = items[b]
+        Ws, Hs, keys = staged
+        if progress:
+            g = "col" if spec.group_size is None else spec.group_size
+            shard_note = (f" sharded x{spec.n_shards}"
+                          if spec.n_shards > 1 else " unsharded")
+            progress(f"[sweep {b}] {spec.method}/{spec.bits}b/g{g}/"
+                     f"r{spec.rank} {spec.m}x{spec.n} x{len(idxs)} "
+                     f"candidates{shard_note}")
+        if spec.n_shards > 1:
+            out = run_bucket_eval_sharded(Ws, Hs, keys, spec, mesh, axis)
+        else:
+            out = run_bucket_eval(Ws, Hs, keys, spec)
+        return idxs, out
+
+    staged = None
+    for b in range(len(items)):
+        if staged is None:
+            staged = _stage_bucket(tasks, items[b][1], items[b][0])
+        idxs, out = dispatch(b, staged)          # async dispatch
+        staged = None
+        if stream and b + 1 < len(items):
+            staged = _stage_bucket(tasks, items[b + 1][1], items[b + 1][0])
+        elif not stream:
+            jax.block_until_ready(out)
+        # defer the host sync: float() would serialize with the device
+        pending.append((idxs, out))
+    for idxs, out in pending:
+        errs = np.asarray(out)
+        for j, i in enumerate(idxs):
+            results[i] = float(errs[j])
     return results

@@ -513,6 +513,94 @@ def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
 
 
 # ---------------------------------------------------------------------------
+# Calibrated bit allocation: derive the QuantRecipe instead of writing it
+# (repro.core.allocate — sensitivity sweep + budget solver).
+# ---------------------------------------------------------------------------
+
+
+def _allocation_meta(eparams: dict, store: GramStore
+                     ) -> dict[str, tuple[int, int, int, int]]:
+    """Per-site geometry for the allocator's byte accounting:
+    ``{path: (m, n, experts, lora_sites)}``.  Stacked MoE weights multiply
+    everything by E; weight-shared linears store one base plus one adapter
+    pair per recorded call site."""
+    meta: dict[str, tuple[int, int, int, int]] = {}
+    for lin_path in quantizable_linear_paths(eparams):
+        W = get_path(eparams, lin_path)["w"]
+        if W.ndim == 3:
+            E, m, n = W.shape
+            meta[lin_path] = (m, n, E, 1)
+        elif lin_path.startswith("shared.block."):
+            m, n = W.shape
+            _, site_paths, _ = _shared_site_grams(store, lin_path)
+            meta[lin_path] = (m, n, 1, len(site_paths))
+        else:
+            m, n = W.shape
+            meta[lin_path] = (m, n, 1, 1)
+    return meta
+
+
+def allocate_plan(params: dict, cfg: ModelConfig, calib, budget_bytes: int,
+                  *, grid=None, qspec: QSpec | None = None,
+                  include_skip: bool = False, seed: int = 0,
+                  mesh=None, shard_axis: str = "model",
+                  progress: Callable[[str], None] | None = None):
+    """Solve for a mixed-precision plan under a byte budget.
+
+    Stage 1 sweeps every quantization site over the candidate ``grid``
+    (``(method, bits, rank)`` tuples; :func:`repro.core.allocate.
+    default_grid` when ``None``), computing each candidate's
+    calibration-weighted proxy error ``tr(E^T H E)`` through the batched
+    engine — one fused ``jit(vmap)`` bucket per ``(shape x candidate)``
+    slab, sharded over ``mesh`` where the planner allows.  Stage 2 picks
+    one candidate per site (scan-uniform group) minimizing total proxy
+    error subject to exact serialized bytes <= ``budget_bytes``.
+
+    Args:
+        calib: calibration batches, or an already-populated
+            :class:`~repro.utils.GramStore` (e.g. from a previous
+            :func:`run_calibration`) to reuse without re-running the model.
+        qspec: base :class:`QSpec` the candidates inherit
+            ``group_size``/``split`` from (default ``cfg.quant``).
+        include_skip: add the leave-dense candidate per site.
+
+    Returns a :class:`repro.core.allocate.Allocation`; its ``.recipe`` is
+    ready for ``quantize_model(recipe=...)``."""
+    from repro.core import allocate
+    base = qspec or cfg.quant or QSpec()
+    eparams = to_eager_params(params, cfg)
+    store = (calib if isinstance(calib, GramStore)
+             else run_calibration(eparams, cfg, calib))
+    # every site participates in the sweep: resolve a zero-rule recipe
+    # (per-candidate specs are substituted task-by-task in the sweep)
+    sites = QuantRecipe.single(base.method or "cloq", base).resolve(
+        quantizable_linear_paths(eparams))
+    tasks, _ = _gather_tasks(eparams, store, sites, seed)
+    scan_containers = tuple(_STACK_KEYS) if cfg.scan_layers else ()
+    return allocate.build_allocation(
+        tasks, _allocation_meta(eparams, store), budget_bytes, base, grid,
+        cfg.dtype, scan_containers=scan_containers,
+        include_skip=include_skip, mesh=mesh, axis=shard_axis,
+        progress=progress)
+
+
+def allocate_recipe(params: dict, cfg: ModelConfig, calib,
+                    budget_bytes: int, *, grid=None,
+                    qspec: QSpec | None = None,
+                    include_skip: bool = False, seed: int = 0,
+                    mesh=None, shard_axis: str = "model",
+                    progress: Callable[[str], None] | None = None
+                    ) -> QuantRecipe:
+    """:func:`allocate_plan` returning just the emitted
+    :class:`QuantRecipe` — the budget-optimal mixed-precision plan, ready
+    for ``quantize_model(recipe=...)`` or ``--recipe plan.json``."""
+    return allocate_plan(params, cfg, calib, budget_bytes, grid=grid,
+                         qspec=qspec, include_skip=include_skip, seed=seed,
+                         mesh=mesh, shard_axis=shard_axis,
+                         progress=progress).recipe
+
+
+# ---------------------------------------------------------------------------
 # Abstract quantized parameter shapes + bucket manifest (dry-run: no
 # allocation, no compute, no calibration).
 # ---------------------------------------------------------------------------
@@ -610,6 +698,31 @@ def quantization_manifest(cfg: ModelConfig, method: str | None = None,
         # scan-stacked form (one extra unsharded leading dim)
         manifest["stacked"] = [k for k in _STACK_KEYS if k in eshapes]
     return manifest
+
+
+def recipe_plan_bytes(cfg: ModelConfig, recipe: QuantRecipe) -> int:
+    """Exact serialized bytes of all quantization sites under ``recipe``,
+    evaluated from abstract shapes alone (no weights, no calibration) —
+    the allocator's byte accounting (:func:`repro.core.allocate.
+    site_bytes`) applied to a whole plan.  Skipped sites count their dense
+    weight.  Used by the dry-run ``--budget-mb`` validation and asserted
+    equal to the :func:`quantized_param_shapes` layout in tests."""
+    from repro.core.allocate import site_bytes
+    eshapes = _abstract_eager_shapes(cfg)
+    sites = recipe.resolve(quantizable_linear_paths(eshapes))
+    total = 0
+    for lin_path, site in sites.items():
+        W = get_path(eshapes, lin_path)["w"]
+        experts, (m, n) = (1, W.shape) if W.ndim == 2 else \
+            (W.shape[0], W.shape[1:])
+        lora_sites = 1
+        if lin_path.startswith("shared.block."):
+            sl = eshapes.get("shared", {}).get("site_lora", {})
+            name = lin_path[len("shared.block."):].replace(".", "_")
+            lora_sites = (sl[name]["lora_a"].shape[0]
+                          if name in sl else 0)
+        total += site_bytes(m, n, site, cfg.dtype, experts, lora_sites)
+    return total
 
 
 def _quant_leaf_shapes(m: int, n: int, qspec: QSpec, dtype,

@@ -179,3 +179,19 @@ class QuantRecipe:
         """Load a recipe from a JSON file (``train --recipe plan.json``)."""
         with open(path) as f:
             return cls.from_dict(json.load(f))
+
+
+def load_plan(path: str) -> QuantRecipe:
+    """Load a :class:`QuantRecipe` from either a recipe JSON or a bucket
+    **manifest** JSON that embeds one (``quantization_manifest`` output /
+    checkpoint ``meta.json`` — e.g. an auto-allocated plan saved alongside
+    a production checkpoint).  The launchers' ``--recipe`` flags all route
+    through here, so a served model can be pointed straight at the
+    artifact its training run produced."""
+    with open(path) as f:
+        d = json.load(f)
+    if "buckets" in d:                     # a bucket manifest
+        if "recipe" not in d:
+            raise ValueError(f"{path}: manifest carries no recipe")
+        return QuantRecipe.from_dict(d["recipe"])
+    return QuantRecipe.from_dict(d)

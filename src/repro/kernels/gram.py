@@ -14,6 +14,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; accept both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 Array = jax.Array
 
 
@@ -53,7 +57,7 @@ def gram(x: Array, *, bi: int = 128, bj: int = 128, bt: int = 512,
         out_specs=pl.BlockSpec((bi, bj), lambda i, j, t: (i, j)),
         out_shape=jax.ShapeDtypeStruct((D, D), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bi, bj), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x2, x2)

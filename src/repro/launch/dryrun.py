@@ -152,7 +152,8 @@ def lower_cell(arch: str, cell: str, *, multi_pod: bool = False,
                seq_shard: bool = False, dp_only: bool = False,
                prefill_last: bool = False, microbatch: int = 1,
                ssm_chunk: int = 0, kv8: bool = False,
-               recipe_path: str | None = None) -> dict:
+               recipe_path: str | None = None,
+               budget_mb: float = 0.0) -> dict:
     from repro.configs import get_config
     from repro.launch.mesh import make_production_mesh, pcontext_for
     from repro.launch.steps import (SHAPE_CELLS, abstract_cache,
@@ -193,12 +194,30 @@ def lower_cell(arch: str, cell: str, *, multi_pod: bool = False,
     # skipped sites dense) and lowered/sharded like any other layout
     recipe = None
     if recipe_path:
+        from repro.core.recipe import load_plan
+        recipe = load_plan(recipe_path)
+
+    # budget validation (the allocator's exact byte accounting evaluated on
+    # abstract shapes — no weights): does the plan this cell would lower
+    # fit the deployment budget?  Recorded in the JSON, and a violation is
+    # visible before anything compiles.
+    budget = None
+    if budget_mb:
+        from repro.core.pipeline import recipe_plan_bytes
         from repro.core.recipe import QuantRecipe
-        recipe = QuantRecipe.load(recipe_path)
+        plan = recipe or QuantRecipe.single("cloq", qspec)
+        plan_bytes = recipe_plan_bytes(cfg, plan)
+        budget = {"budget_bytes": int(budget_mb * 2**20),
+                  "plan_bytes": plan_bytes,
+                  "fits": plan_bytes <= int(budget_mb * 2**20)}
+        if verbose and not budget["fits"]:
+            print(f"[budget] plan needs {plan_bytes} B > budget "
+                  f"{budget['budget_bytes']} B", flush=True)
 
     ok, why = cell_applicable(cfg, cell)
     if not ok:
-        return {"arch": arch, "cell": cell, "skipped": True, "reason": why}
+        return {"arch": arch, "cell": cell, "skipped": True, "reason": why,
+                "budget": budget}
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     pctx = pcontext_for(mesh)
@@ -293,6 +312,7 @@ def lower_cell(arch: str, cell: str, *, multi_pod: bool = False,
         "collectives": {"total_bytes": colls["total_bytes"],
                         "per_kind": colls["per_kind"],
                         "n_ops": colls["n_ops"]},
+        "budget": budget,
     }
     if verbose:
         print(json.dumps({k: v for k, v in result.items()
@@ -357,8 +377,14 @@ def main(argv=None) -> int:
     p.add_argument("--ssm-chunk", type=int, default=0)
     p.add_argument("--kv8", action="store_true")
     p.add_argument("--recipe", default="",
-                   help="QuantRecipe JSON: lower the cell with the per-site "
+                   help="QuantRecipe JSON (or a bucket-manifest embedding "
+                        "one): lower the cell with the per-site "
                         "mixed-precision abstract layout")
+    p.add_argument("--budget-mb", type=float, default=0.0,
+                   help="validate the plan's exact serialized bytes "
+                        "against this budget (MiB) from abstract shapes "
+                        "(repro.core.allocate accounting); recorded in "
+                        "the output JSON")
     p.add_argument("--tag", default="", help="suffix for the output file")
     p.add_argument("--out", default="results/dryrun")
     args = p.parse_args(argv)
@@ -374,7 +400,8 @@ def main(argv=None) -> int:
                      attn_chunk=args.attn_chunk, seq_shard=args.seq_shard,
                      dp_only=args.dp_only, prefill_last=args.prefill_last,
                      microbatch=args.microbatch, ssm_chunk=args.ssm_chunk,
-                     kv8=args.kv8, recipe_path=args.recipe or None)
+                     kv8=args.kv8, recipe_path=args.recipe or None,
+                     budget_mb=args.budget_mb)
     os.makedirs(args.out, exist_ok=True)
     tag = f"{args.arch}.{args.cell}.{'multi' if args.multi_pod else 'single'}"
     if args.depth:

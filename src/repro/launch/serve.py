@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.core.pipeline import quantize_model
+from repro.core.recipe import QuantRecipe, load_plan
 from repro.data import DataConfig, TokenStream
 from repro.launch.steps import make_decode_step
 from repro.models.modules import QSpec
@@ -31,6 +32,10 @@ def main(argv=None) -> int:
     p.add_argument("--arch", required=True)
     p.add_argument("--smoke", action="store_true")
     p.add_argument("--method", default="cloq")
+    p.add_argument("--recipe", default="",
+                   help="QuantRecipe JSON — or a bucket-manifest JSON "
+                        "embedding one (checkpoint meta / auto-allocated "
+                        "plan); overrides --method/--bits")
     p.add_argument("--bits", type=int, default=4)
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--cache-len", type=int, default=128)
@@ -42,9 +47,15 @@ def main(argv=None) -> int:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
     params = init_params(key, cfg)
-    if args.method != "none":
-        qspec = QSpec(bits=args.bits, group_size=16 if args.smoke else 64,
-                      rank=8 if args.smoke else 64, method=args.method)
+    recipe = None
+    if args.recipe:
+        recipe = load_plan(args.recipe)
+    elif args.method != "none":
+        recipe = QuantRecipe.single(
+            args.method,
+            QSpec(bits=args.bits, group_size=16 if args.smoke else 64,
+                  rank=8 if args.smoke else 64, method=args.method))
+    if recipe is not None:
         dcfg = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=2,
                           seed=args.seed,
                           kind="encdec" if cfg.family == "encdec" else
@@ -52,8 +63,7 @@ def main(argv=None) -> int:
                           enc_len=16, n_prefix=cfg.n_prefix,
                           d_model=cfg.d_model)
         calib = [TokenStream(dcfg).next_batch()]
-        params, cfg, _ = quantize_model(params, cfg, calib,
-                                        method=args.method, qspec=qspec)
+        params, cfg, _ = quantize_model(params, cfg, calib, recipe=recipe)
 
     B = args.batch
     cache = init_decode_cache(cfg, B, args.cache_len)

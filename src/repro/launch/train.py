@@ -29,8 +29,9 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_smoke_config
-from repro.core.pipeline import quantization_manifest, quantize_model
-from repro.core.recipe import QuantRecipe
+from repro.core.pipeline import (allocate_plan, quantization_manifest,
+                                 quantize_model)
+from repro.core.recipe import QuantRecipe, load_plan
 from repro.data import DataConfig, TokenStream
 from repro.launch.steps import build_state, make_train_step
 from repro.models.modules import QSpec
@@ -48,9 +49,17 @@ def parse_args(argv=None):
     p.add_argument("--method", default="cloq",
                    choices=["cloq", "gptq", "loftq", "qlora", "rtn", "none"])
     p.add_argument("--recipe", default="",
-                   help="path to a QuantRecipe JSON (per-site mixed-"
-                        "precision plan; overrides --method/--bits/"
-                        "--group-size/--rank/--split)")
+                   help="path to a QuantRecipe JSON — or a bucket-manifest "
+                        "JSON embedding one (per-site mixed-precision "
+                        "plan; overrides --method/--bits/--group-size/"
+                        "--rank/--split)")
+    p.add_argument("--auto-allocate", action="store_true",
+                   help="derive the recipe from calibration sensitivities "
+                        "under --budget-mb (repro.core.allocate: vmapped "
+                        "sweep + budgeted knapsack solve)")
+    p.add_argument("--budget-mb", type=float, default=0.0,
+                   help="total quantized-site byte budget for "
+                        "--auto-allocate, in MiB")
     p.add_argument("--bits", type=int, default=4)
     p.add_argument("--group-size", type=int, default=64)
     p.add_argument("--rank", type=int, default=64)
@@ -100,17 +109,43 @@ def main(argv=None) -> int:
         print(f"[pretrain] {args.pretrain_steps} steps, "
               f"loss={float(m0['loss']):.4f}")
 
+    if args.auto_allocate and args.recipe:
+        raise SystemExit("--auto-allocate derives the recipe; it conflicts "
+                         "with an explicit --recipe")
+    if args.auto_allocate and args.method == "none":
+        raise SystemExit("--auto-allocate conflicts with --method none")
+    if args.budget_mb and not args.auto_allocate:
+        raise SystemExit("--budget-mb only applies with --auto-allocate")
     recipe = None
     if args.recipe:
-        recipe = QuantRecipe.load(args.recipe)
-    elif args.method != "none":
+        recipe = load_plan(args.recipe)
+    elif args.method != "none" and not args.auto_allocate:
         recipe = QuantRecipe.single(
             args.method, QSpec(bits=args.bits, group_size=args.group_size,
                                rank=args.rank, method=args.method,
                                split=args.split))
+    calib = None
+    if args.auto_allocate:
+        if args.budget_mb <= 0:
+            raise SystemExit("--auto-allocate needs --budget-mb > 0")
+        from repro.core.allocate import default_grid
+        base = QSpec(bits=args.bits, group_size=args.group_size,
+                     rank=args.rank, method=args.method, split=args.split)
+        calib = [stream.next_batch() for _ in range(args.calib_batches)]
+        t0 = time.time()
+        # candidate bits x ranks around the CLI method (27-candidate full
+        # grid only when explicitly scripted through the API)
+        alloc = allocate_plan(params, cfg, calib,
+                              int(args.budget_mb * 2**20),
+                              grid=default_grid(methods=(args.method,)),
+                              qspec=base)
+        print(f"[allocate] solved in {time.time() - t0:.1f}s")
+        print(alloc.summary())
+        recipe = alloc.recipe
     manifest = None
     if recipe is not None:
-        calib = [stream.next_batch() for _ in range(args.calib_batches)]
+        if calib is None:
+            calib = [stream.next_batch() for _ in range(args.calib_batches)]
         t0 = time.time()
         params, cfg, _ = quantize_model(params, cfg, calib, recipe=recipe)
         print(f"[quantize] {len(recipe.rules)} site rule(s), default "

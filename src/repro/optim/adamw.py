@@ -81,7 +81,14 @@ def partition_params(params, mask):
 
 
 def merge_params(train, frozen):
-    return jax.tree.map(lambda t, f: t if t.size else f, train, frozen)
+    # a leaf is the placeholder iff it is exactly the (0,) stub — a genuine
+    # zero-size param (e.g. a rank-0 LoRA adapter from a bit-allocation
+    # recipe, shape (m, 0)) keeps its own multi-dim shape and must win
+    def pick(t, f):
+        if t.size:
+            return t
+        return f if t.shape == (0,) else t
+    return jax.tree.map(pick, train, frozen)
 
 
 def clip_by_global_norm(grads, max_norm: float):

@@ -25,7 +25,7 @@ REPO = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 
 DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
-DOCTEST_MODULES = ["repro.core.batched"]
+DOCTEST_MODULES = ["repro.core.batched", "repro.core.allocate"]
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
