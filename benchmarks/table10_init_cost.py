@@ -94,6 +94,46 @@ def _bucket_row(m: int, n: int, n_layers: int, qspec: QSpec, rng) -> dict:
             "speedup": round(t_seq / t_bat, 2)}
 
 
+def _health_guard_row(rng, m: int = 256, n: int = 256,
+                      n_layers: int = 8) -> dict:
+    """Health-guard overhead on a clean bucket: the per-bucket check is one
+    ``jit(vmap)`` finiteness + RTN-roundtrip pass — O(m n) per slice against
+    the sweep's O(m^2 n) — so a healthy run should pay well under 5% for
+    the guarantee that a bad Gram degrades instead of shipping NaNs.
+    Measured at a realistic width (the relative cost only shrinks as m
+    grows) with extra reps: single-shot timings on this 2-core host swing
+    more than the quantity being measured."""
+    from repro.core.health import HealthPolicy, HealthReport
+
+    qspec = QSpec(bits=2, group_size=64, rank=16)
+    Ws = [jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+          for _ in range(n_layers)]
+    Hs = []
+    for _ in range(n_layers):
+        X = rng.normal(size=(1024, m)).astype(np.float32)
+        Hs.append(jnp.asarray(X.T @ X))
+    keys = jax.random.split(jax.random.PRNGKey(0), n_layers)
+    tasks = [LayerTask(f"l{i}", None, Wi, Hi, ki)
+             for i, (Wi, Hi, ki) in enumerate(zip(Ws, Hs, keys))]
+
+    def unguarded():
+        outs = quantize_layer_batch(tasks, qspec, "cloq")
+        jax.block_until_ready(outs[-1]["lora_a"])
+
+    def guarded():
+        outs = quantize_layer_batch(tasks, qspec, "cloq",
+                                    policy=HealthPolicy(),
+                                    report=HealthReport())
+        jax.block_until_ready(outs[-1]["lora_a"])
+
+    unguarded()
+    guarded()      # compile both (incl. the check executable) before timing
+    t_off, t_on = _best_of(unguarded, reps=5), _best_of(guarded, reps=5)
+    return {"m": m, "n": n, "n_layers": n_layers,
+            "unguarded_s": round(t_off, 3), "guarded_s": round(t_on, 3),
+            "overhead_pct": round((t_on - t_off) / t_off * 100, 2)}
+
+
 def _mixed_recipe_row(rng, n_layers: int = 8) -> dict:
     """Heterogeneous-plan cost: one QuantRecipe resolving 2-bit/r16 CLoQ
     MLP sites next to 4-bit/r8 CLoQ attention sites, executed as two
@@ -379,6 +419,11 @@ def run() -> dict:
                   f"fused={row['sharded_batched_s']}s "
                   f"({row['speedup']}x)", flush=True)
 
+    hg = _health_guard_row(rng)
+    print(f"  health guard {hg['m']}x{hg['n']} x{hg['n_layers']}: "
+          f"off={hg['unguarded_s']}s on={hg['guarded_s']}s "
+          f"({hg['overhead_pct']}% overhead)", flush=True)
+
     mixed = _mixed_recipe_row(rng)
     print(f"  mixed recipe ({mixed['n_buckets']} buckets, "
           f"{mixed['n_layers']} sites): seq={mixed['sequential_s']}s "
@@ -407,6 +452,7 @@ def run() -> dict:
            "batched_rows": batched_rows,
            "batched_speedup_best": max(r["speedup"] for r in batched_rows),
            "sharded_rows": sharded_rows,
+           "health_guard_row": hg,
            "mixed_recipe_row": mixed,
            "auto_alloc_row": auto,
            "loftq_sharded_row": lq,

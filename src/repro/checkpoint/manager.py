@@ -29,11 +29,13 @@ Fault-tolerance properties:
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
 import time
+import zlib
 
 import jax
 import numpy as np
@@ -44,6 +46,15 @@ _BF16_TAG = "__bf16__"
 
 # meta.json key holding the serialized bucket manifest (plan output)
 MANIFEST_KEY = "bucket_manifest"
+
+# in-progress and superseded step directories live under <dir>/tmp/ — only
+# a fully-written step is ever renamed into the checkpoint root, so readers
+# (and _list_steps) never observe a torn directory
+_TMP_SUBDIR = "tmp"
+
+# marker file: a pinned step (e.g. the preemption checkpoint) that _gc must
+# never collect
+PIN_MARKER = "PINNED"
 
 
 def _to_host(tree) -> dict[str, np.ndarray]:
@@ -58,33 +69,70 @@ def _to_host(tree) -> dict[str, np.ndarray]:
     return out
 
 
+def _leaf_checksums(host: dict[str, np.ndarray]) -> dict[str, int]:
+    """crc32 per host array (over its raw bytes) — stored in meta.json and
+    verified by :func:`restore_tree` so a flipped or truncated shard fails
+    loudly, naming the corrupt leaf, instead of loading garbage."""
+    return {k: int(zlib.crc32(np.ascontiguousarray(v).tobytes()))
+            for k, v in host.items()}
+
+
 def save_tree(tree, directory: str, step: int, extra_meta: dict | None = None,
-              background: bool = False,
-              manifest: dict | None = None) -> threading.Thread | None:
+              background: bool = False, manifest: dict | None = None,
+              pin: bool = False) -> threading.Thread | None:
     """Atomic write of a pytree snapshot. Returns the writer thread if
     ``background``.
+
+    The write is torn-proof: everything lands in ``<dir>/tmp/`` first
+    (arrays, then ``meta.json`` last, fsynced — its presence marks the
+    payload complete) and the finished directory is renamed into place in
+    one step; an existing step of the same number is moved aside into
+    ``tmp/`` before the rename and deleted after, so readers never observe
+    a half-written or half-deleted step.
 
     ``manifest``: optional bucket manifest
     (``repro.core.pipeline.quantization_manifest``) serialized into
     ``meta.json`` so :func:`restore_tree` can rebuild per-bucket shardings
-    on any mesh without re-running the planner."""
+    on any mesh without re-running the planner.
+
+    ``pin``: mark the step (a :data:`PIN_MARKER` file inside it) so
+    :class:`CheckpointManager`'s retention GC never collects it — used for
+    preemption checkpoints, which must survive however many routine saves
+    follow on restart."""
     os.makedirs(directory, exist_ok=True)
     host = _to_host(tree)
     meta = {"step": int(step), "time": time.time()}
     meta.update(extra_meta or {})
+    meta["checksums"] = _leaf_checksums(host)
     if manifest is not None:
         meta[MANIFEST_KEY] = manifest
 
     def write():
-        tmp = os.path.join(directory, f"tmp.{step}.{os.getpid()}")
+        from repro.core import faults
+        tmproot = os.path.join(directory, _TMP_SUBDIR)
+        os.makedirs(tmproot, exist_ok=True)
+        tag = f"{step}.{os.getpid()}.{threading.get_native_id()}"
+        tmp = os.path.join(tmproot, f"new.{tag}")
         final = os.path.join(directory, f"step_{step:08d}")
         os.makedirs(tmp, exist_ok=True)
         np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        if pin:
+            with open(os.path.join(tmp, PIN_MARKER), "w"):
+                pass
+        # meta.json is written LAST and fsynced: a directory carrying one
+        # is complete by construction
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
         if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
+            stale = os.path.join(tmproot, f"stale.{tag}")
+            os.rename(final, stale)
+            os.rename(tmp, final)
+            shutil.rmtree(stale, ignore_errors=True)
+        else:
+            os.rename(tmp, final)
+        faults.post_commit(final, step)        # shard_truncate injection
 
     if background:
         t = threading.Thread(target=write, daemon=True)
@@ -95,12 +143,18 @@ def save_tree(tree, directory: str, step: int, extra_meta: dict | None = None,
 
 
 def _list_steps(directory: str) -> list[int]:
+    """Complete checkpoint steps under ``directory`` (in-progress writes
+    live in ``tmp/``; a step directory without ``meta.json`` — e.g. one
+    written by a pre-atomic layout and killed mid-write — is ignored)."""
     if not os.path.isdir(directory):
         return []
     steps = []
     for name in os.listdir(directory):
-        if name.startswith("step_"):
-            steps.append(int(name[len("step_"):]))
+        if not name.startswith("step_"):
+            continue
+        if not os.path.isfile(os.path.join(directory, name, "meta.json")):
+            continue
+        steps.append(int(name[len("step_"):]))
     return sorted(steps)
 
 
@@ -169,14 +223,37 @@ def restore_tree(directory: str, step: int | None = None, *,
         raise FileNotFoundError(f"no checkpoints under {directory}")
     step = steps[-1] if step is None else step
     path = os.path.join(directory, f"step_{step:08d}")
-    data = np.load(os.path.join(path, "arrays.npz"))
+    shard = os.path.join(path, "arrays.npz")
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
+    checksums = meta.get("checksums", {})
+    try:
+        data = np.load(shard)
+        files = data.files
+    except Exception as e:
+        raise ValueError(
+            f"checkpoint shard {shard} is unreadable (truncated or "
+            f"corrupt archive): {e!r} — delete step_{step:08d} and restore "
+            "an earlier step") from e
     if shardings is None and mesh is not None and MANIFEST_KEY in meta:
         shardings = manifest_shardings(meta[MANIFEST_KEY], mesh, axis)
     tree: dict = {}
-    for key in data.files:
-        arr = data[key]
+    for key in files:
+        leaf_name = key[: -len(_BF16_TAG)] if key.endswith(_BF16_TAG) else key
+        try:
+            arr = data[key]
+        except Exception as e:
+            raise ValueError(
+                f"leaf {leaf_name!r} in {shard} is unreadable (shard "
+                f"truncated mid-member): {e!r} — delete step_{step:08d} "
+                "and restore an earlier step") from e
+        if key in checksums and \
+                int(zlib.crc32(np.ascontiguousarray(arr).tobytes())) \
+                != checksums[key]:
+            raise ValueError(
+                f"checksum mismatch for leaf {leaf_name!r} in {shard} — "
+                "the shard is corrupt (bit rot or torn write); delete "
+                f"step_{step:08d} and restore an earlier step")
         if key.endswith(_BF16_TAG):
             key = key[: -len(_BF16_TAG)]
             arr = arr.view(jax.numpy.bfloat16)
@@ -206,13 +283,14 @@ class CheckpointManager:
             self._thread = None
 
     def maybe_save(self, step: int, tree, extra_meta: dict | None = None,
-                   force: bool = False, manifest: dict | None = None) -> bool:
+                   force: bool = False, manifest: dict | None = None,
+                   pin: bool = False) -> bool:
         if not force and (self.every <= 0 or step % self.every != 0):
             return False
         self.wait()
         self._thread = save_tree(tree, self.directory, step, extra_meta,
                                  background=self.async_write,
-                                 manifest=manifest)
+                                 manifest=manifest, pin=pin)
         self._gc()
         return True
 
@@ -229,5 +307,75 @@ class CheckpointManager:
     def _gc(self) -> None:
         steps = _list_steps(self.directory)
         for s in steps[: -self.keep]:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
-                          ignore_errors=True)
+            path = os.path.join(self.directory, f"step_{s:08d}")
+            if os.path.exists(os.path.join(path, PIN_MARKER)):
+                continue                      # pinned (e.g. preemption save)
+            shutil.rmtree(path, ignore_errors=True)
+
+
+class QuantJournal:
+    """Per-bucket journal of an in-progress quantization run.
+
+    Each completed bucket is committed **synchronously** as one checkpoint
+    step (``step == bucket index``) through :func:`save_tree`, inheriting
+    its atomicity and checksums: the quantized leaves of the bucket's tasks
+    land under keys ``t<j>`` (``j`` = position within the bucket), dense
+    fallbacks are recorded as indices in ``meta.json`` rather than leaves,
+    and the tasks' health-ladder records ride along.  A restarted run calls
+    :meth:`load_bucket` before computing each bucket and skips the ones the
+    journal already holds — bit-identical, since f32/uint8 leaves round-trip
+    npz losslessly.
+
+    Entries are fingerprinted over the bucket spec *and* the ordered task
+    identities, so a journal from a different recipe, model, or task order
+    is silently ignored (the bucket is recomputed) instead of restoring the
+    wrong weights."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+
+    @staticmethod
+    def _fingerprint(spec_dict: dict, task_ids: list) -> str:
+        blob = json.dumps([spec_dict, task_ids], sort_keys=True)
+        return hashlib.sha1(blob.encode()).hexdigest()
+
+    def buckets(self) -> list[int]:
+        return _list_steps(self.directory)
+
+    def load_bucket(self, bucket: int, spec_dict: dict, task_ids: list):
+        """Return ``(results, health_records)`` for a previously committed
+        bucket, or ``None`` when absent/stale/unreadable (→ recompute).
+
+        ``results`` is ordered like ``task_ids``: a leaf dict per task, or
+        ``None`` where the run degraded the task to dense."""
+        path = os.path.join(self.directory, f"step_{bucket:08d}")
+        if not os.path.isfile(os.path.join(path, "meta.json")):
+            return None
+        try:
+            tree, meta = restore_tree(self.directory, bucket)
+        except Exception:
+            return None                       # truncated/corrupt → recompute
+        if meta.get("journal_fingerprint") != \
+                self._fingerprint(spec_dict, task_ids):
+            return None
+        dense = set(meta.get("dense", ()))
+        out = []
+        for j in range(len(task_ids)):
+            if j in dense:
+                out.append(None)
+            elif f"t{j}" in tree:
+                out.append(tree[f"t{j}"])
+            else:
+                return None                   # incomplete entry → recompute
+        return out, meta.get("health", {})
+
+    def commit_bucket(self, bucket: int, spec_dict: dict, task_ids: list,
+                      results: list, health_records: dict | None = None):
+        tree = {f"t{j}": r for j, r in enumerate(results) if r is not None}
+        meta = {
+            "journal_fingerprint": self._fingerprint(spec_dict, task_ids),
+            "bucket": int(bucket),
+            "dense": [j for j, r in enumerate(results) if r is None],
+            "health": health_records or {},
+        }
+        save_tree(tree, self.directory, bucket, extra_meta=meta)

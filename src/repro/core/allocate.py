@@ -245,8 +245,30 @@ def sweep_sensitivity(tasks: list[LayerTask], groups: list[SiteGroup],
     for (gi, ci), e in zip(slots, errs):
         acc[(gi, ci)] = acc.get((gi, ci), 0.0) + e
     for gi, g in enumerate(groups):
-        g.errors = tuple(acc.get((gi, ci), 0.0)
-                         for ci in range(len(g.candidates)))
+        errors = tuple(acc.get((gi, ci), 0.0)
+                       for ci in range(len(g.candidates)))
+        # an unhealthy candidate (non-finite proxy error — e.g. a Gram
+        # whose damped Cholesky blew up at these bits) must leave the
+        # table entirely: a NaN/Inf error would corrupt the hull chain's
+        # slope comparisons and could get *picked*, baking a known-bad
+        # (method, bits) into the recipe
+        keep = [ci for ci, e in enumerate(errors) if np.isfinite(e)]
+        if not keep:
+            raise RuntimeError(
+                f"allocation sweep: every candidate of site group "
+                f"{g.paths[0]!r} (x{len(g.paths)} paths) produced a "
+                "non-finite proxy error — the site's calibration Gram is "
+                "unusable at every grid point; re-calibrate, or rerun "
+                "with include_skip=True to allow leaving it dense")
+        if len(keep) < len(errors):
+            if progress:
+                progress(f"[sweep] {g.paths[0]}: dropped "
+                         f"{len(errors) - len(keep)} non-finite "
+                         "candidate(s)")
+            g.candidates = tuple(g.candidates[ci] for ci in keep)
+            g.bytes_ = tuple(g.bytes_[ci] for ci in keep)
+            errors = tuple(errors[ci] for ci in keep)
+        g.errors = errors
     return groups
 
 

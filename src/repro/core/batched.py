@@ -241,7 +241,10 @@ def quantize_single_deq(W: Array, H: Array | None, key: Array,
         else:
             Wp = W
         Qd, Qc, s, z = optq_quantize_core(Wp, H, qcfg)
-        Hreg = regularize_gram(H)
+        # spec.lambda_frac regularizes BOTH the OPTQ damping (via qcfg) and
+        # the CLoQ Gram root, so the health ladder's re-damp rung reaches
+        # every Cholesky/eigh in the stack
+        Hreg = regularize_gram(H, spec.lambda_frac)
         if axis is None:
             A, B = cloq_init(Hreg, W - Qd, spec.rank, spec.split)
         else:
@@ -587,7 +590,10 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
                          base: QuantConfig | None = None,
                          progress: Callable[[str], None] | None = None,
                          *, mesh=None, axis: str = "model",
-                         stream: bool = True) -> list[dict]:
+                         stream: bool = True, policy=None, report=None,
+                         journal=None,
+                         should_stop: Callable[[], bool] | None = None
+                         ) -> list[dict | None]:
     """Quantize all ``tasks`` bucket-by-bucket.
 
     The model-level batched engine entry point
@@ -615,12 +621,55 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
                   while the device computes.  ``stream=False`` serializes
                   (block on each bucket before staging the next) — same
                   results, used as the ordering oracle in tests.
+        policy:   optional :class:`repro.core.health.HealthPolicy`.  When
+                  enabled, every finished bucket is checked by one fused
+                  ``jit(vmap)`` health pass (:func:`repro.core.health.
+                  check_bucket`) and failing slices are requeued through
+                  the sequential oracle under the degradation ladder
+                  (:func:`repro.core.health.heal_task`); healed-to-dense
+                  slices yield ``None`` results.
+        report:   optional :class:`repro.core.health.HealthReport`
+                  collecting ladder outcomes and run events (one is
+                  created internally if ``policy`` is set without one).
+        journal:  optional :class:`repro.checkpoint.manager.QuantJournal`.
+                  Each completed (checked, healed) bucket is committed
+                  synchronously — leaves + spec/task fingerprint + health
+                  records — before the next bucket's results land, and
+                  buckets whose valid journal entry already exists are
+                  skipped entirely on restart (their committed leaves are
+                  returned bit-identical).
+        should_stop: optional zero-arg callable polled at every bucket
+                  boundary (after the journal commit); returning True
+                  raises :class:`repro.core.health.QuantPreempted` — the
+                  clean SIGTERM path of ``launch/train.py``.
 
     Returns one leaf dict per task, in task order (same leaves as the
-    sequential path)."""
+    sequential path); entries are ``None`` for slices the health ladder
+    degraded to dense."""
+    from repro.core import faults, health
+
     buckets = plan_buckets(tasks, qspec, method, base, mesh=mesh, axis=axis)
     results: list[dict | None] = [None] * len(tasks)
     items = list(buckets.items())
+    guarded = policy is not None and policy.enabled
+    if guarded and report is None:
+        report = health.HealthReport()
+
+    # journal resume: collect buckets whose committed entry matches this
+    # plan (spec + task list fingerprint); stale entries are recomputed
+    loaded: dict[int, list] = {}
+    if journal is not None:
+        for b, (spec, idxs) in enumerate(items):
+            task_ids = [[tasks[i].path, tasks[i].expert] for i in idxs]
+            entry = journal.load_bucket(b, dataclasses.asdict(spec),
+                                        task_ids)
+            if entry is None:
+                continue
+            loaded[b] = entry[0]
+            if report is not None:
+                report.records.update(entry[1])
+                report.event(f"bucket {b} restored from journal "
+                             f"({len(idxs)} slices skipped)")
 
     def dispatch(b: int, staged) -> tuple[list[int], dict]:
         spec, idxs = items[b]
@@ -640,11 +689,21 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
 
     staged = None
     for b in range(len(items)):
+        spec, idxs = items[b]
+        if b in loaded:
+            staged = None                        # prefetch was for bucket b
+            if progress:
+                progress(f"[bucket {b}] restored from journal "
+                         f"(x{len(idxs)} layers)")
+            for j, i in enumerate(idxs):
+                results[i] = loaded[b][j]
+            continue
         if staged is None:
-            staged = _stage_bucket(tasks, items[b][1], items[b][0])
-        idxs, out = dispatch(b, staged)          # async dispatch
+            staged = _stage_bucket(tasks, idxs, spec)
+        cur = staged
+        idxs, out = dispatch(b, cur)             # async dispatch
         staged = None
-        if stream and b + 1 < len(items):
+        if stream and b + 1 < len(items) and (b + 1) not in loaded:
             # double-buffer: stage bucket b+1 on the host while the device
             # computes bucket b
             staged = _stage_bucket(tasks, items[b + 1][1], items[b + 1][0])
@@ -652,6 +711,32 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
             jax.block_until_ready(out)           # serialize (oracle mode)
         for j, i in enumerate(idxs):
             results[i] = {k: v[j] for k, v in out.items()}
+        if guarded:
+            ok = health.check_bucket(cur[0], out, spec, policy)
+            report.checked += len(idxs)
+            for j, i in enumerate(idxs):
+                if not ok[j]:
+                    t = tasks[i]
+                    results[i] = health.heal_task(t.W, t.H, t.key, spec,
+                                                  policy, report, t.path,
+                                                  t.expert)
+        if journal is not None:
+            # synchronous commit point of the streamed bucket: the journal
+            # entry is only visible once fully written (atomic save_tree)
+            hrecs = {}
+            if report is not None:
+                for i in idxs:
+                    sk = health.HealthReport.site_key(tasks[i].path,
+                                                      tasks[i].expert)
+                    if sk in report.records:
+                        hrecs[sk] = report.records[sk]
+            journal.commit_bucket(
+                b, dataclasses.asdict(spec),
+                [[tasks[i].path, tasks[i].expert] for i in idxs],
+                [results[i] for i in idxs], health_records=hrecs)
+        faults.maybe_kill("kill_between_buckets", b)
+        if should_stop is not None and should_stop():
+            raise health.QuantPreempted(b)
     return results
 
 

@@ -142,7 +142,8 @@ def cloq_lowrank_local(R: Array, Rinv: Array, dW_local: Array, rank: int,
 
 
 def cloq_site_lora(Hs: Array, dW: Array, rank: int, split: str = "paper",
-                   mesh=None, axis: str = "model"):
+                   mesh=None, axis: str = "model",
+                   lambda_frac: float = 0.01):
     """Per-site CLoQ adapters of a weight-shared block: one Theorem-3.1
     solve per call site against the site's own Gram, with the residual
     ``dW = W - Q`` of the (pooled-Gram) shared base fixed.
@@ -169,11 +170,13 @@ def cloq_site_lora(Hs: Array, dW: Array, rank: int, split: str = "paper",
     Hs = jnp.asarray(Hs, jnp.float32)
     if mesh is None:
         return jax.vmap(
-            lambda H: cloq_init(regularize_gram(H), dW, rank, split))(Hs)
+            lambda H: cloq_init(regularize_gram(H, lambda_frac), dW, rank,
+                                split))(Hs)
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
-    Rs, Rinvs = jax.vmap(lambda H: gram_root(regularize_gram(H)))(Hs)
+    Rs, Rinvs = jax.vmap(
+        lambda H: gram_root(regularize_gram(H, lambda_frac)))(Hs)
 
     def local(Rs_, Rinvs_, dW_l):
         return jax.vmap(lambda R, Rinv: cloq_lowrank_local(

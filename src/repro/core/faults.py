@@ -1,0 +1,239 @@
+"""Fault-injection harness: named failure points the runtime honors.
+
+At 70B-class scale the quantization pass is a long, stateful pipeline —
+calibration Grams, MagR, the OPTQ sweep, the closed-form LoRA solve, bucket
+streaming, checkpoint I/O — and every stage has a real-world failure mode:
+an all-NaN calibration batch, an ill-conditioned (or outright non-PSD)
+Gram, a torn checkpoint shard, a preemption between buckets.  The health
+guards (:mod:`repro.core.health`), the quantization journal
+(:class:`repro.checkpoint.manager.QuantJournal`) and the checkpoint
+checksums exist to survive exactly these — and this module is how tests
+*produce* them deterministically.
+
+Each injection point is a named hook compiled into the runtime at the spot
+where the corresponding real fault would strike.  All hooks are no-ops
+unless an :class:`Injection` is armed, so the hot path pays one list-empty
+check.
+
+Injection points
+----------------
+``gram_nan``
+    Replace a site's calibration Gram with all-NaN at the moment the
+    engine reads it from the :class:`~repro.utils.GramStore` (a NaN
+    calibration batch that slipped past upstream filters).  Target: glob
+    over the site's param path (``blocks.0.attn.q``).
+``gram_non_psd``
+    Shift the Gram's spectrum strongly negative (``H - 2 tr(H)/m I``): the
+    damped Cholesky fails outright and re-damping cannot save it — the
+    ladder must escalate to the identity-Gram fallback.
+``gram_jitter``
+    Mildly deficient Gram (``H - 0.03 tr(H)/m I``): the default damping
+    (``lambda_frac=0.01``) fails but the first re-damp rung
+    (``lambda_frac=0.05``) recovers — exercises the gentlest ladder step.
+``calib_nan``
+    Make one calibration batch produce non-finite activations: float
+    input leaves are NaN-filled before the forward pass, and the batch's
+    accumulated Gram updates are NaN-poisoned after it (so pure-token
+    batches, which carry no float leaf to corrupt, still exercise the
+    skip-and-log path).  Target: batch index.
+``calib_drop``
+    Drop one calibration batch entirely (data loss).  Target: batch index.
+``shard_truncate``
+    Truncate the committed ``arrays.npz`` of a checkpoint step right after
+    the atomic rename (torn write that survived a crash).  Target: step.
+``kill_between_buckets``
+    SIGKILL the process immediately after bucket *k*'s journal commit —
+    the hard-preemption case resumable runs must survive.  Target: bucket
+    index.
+
+Driving injections
+------------------
+Tests arm injections either with the context manager::
+
+    with faults.inject("gram_nan", match="blocks.0.attn.q"):
+        quantize_model(...)
+
+or — for subprocess tests where the failing code runs in a child — via the
+``REPRO_FAULTS`` environment variable, ``;``-separated ``point=match``
+pairs::
+
+    REPRO_FAULTS="kill_between_buckets=1" python -m repro.launch.train ...
+
+Env-armed injections are parsed once per distinct env value and live for
+the process lifetime.  Arming is scoped and glob-targeted:
+
+>>> with inject("gram_nan", match="blocks.0.*"):
+...     active("gram_nan", "blocks.0.attn.q") is not None
+True
+>>> active("gram_nan", "blocks.0.attn.q") is None    # disarmed on exit
+True
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import fnmatch
+import os
+import signal
+
+import numpy as np
+
+ENV_VAR = "REPRO_FAULTS"
+
+POINTS = ("gram_nan", "gram_non_psd", "gram_jitter", "calib_nan",
+          "calib_drop", "shard_truncate", "kill_between_buckets")
+
+# sentinel returned by corrupt_batch for a dropped batch
+DROPPED = object()
+
+
+@dataclasses.dataclass
+class Injection:
+    """One armed fault: a named point plus a target match pattern.
+
+    ``match`` is compared against the hook's target (param path, batch
+    index, bucket index, checkpoint step) as a string glob —
+    ``fnmatch.fnmatchcase(str(target), match)`` — so ``"*"`` hits every
+    occurrence and ``"blocks.0.*"`` / ``"3"`` pick one site / index."""
+    point: str
+    match: str = "*"
+
+    def __post_init__(self):
+        if self.point not in POINTS:
+            raise ValueError(f"unknown injection point {self.point!r}; "
+                             f"options {POINTS}")
+
+    def hits(self, target) -> bool:
+        return fnmatch.fnmatchcase(str(target), self.match)
+
+
+_active: list[Injection] = []
+_env_cache: tuple[str, list[Injection]] | None = None
+
+
+def _parse_env(value: str) -> list[Injection]:
+    out = []
+    for part in value.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        point, _, match = part.partition("=")
+        out.append(Injection(point.strip(), match.strip() or "*"))
+    return out
+
+
+def _env_injections() -> list[Injection]:
+    global _env_cache
+    value = os.environ.get(ENV_VAR, "")
+    if _env_cache is None or _env_cache[0] != value:
+        _env_cache = (value, _parse_env(value))
+    return _env_cache[1]
+
+
+def active(point: str, target) -> Injection | None:
+    """The first armed injection hitting ``(point, target)``, else None.
+
+    The no-fault fast path is one empty-list check plus one (cached) env
+    read — cheap enough to sit on the engine's per-site hot path."""
+    for inj in _active:
+        if inj.point == point and inj.hits(target):
+            return inj
+    for inj in _env_injections():
+        if inj.point == point and inj.hits(target):
+            return inj
+    return None
+
+
+@contextlib.contextmanager
+def inject(point: str, match: str = "*"):
+    """Arm one injection for the duration of the ``with`` block."""
+    inj = Injection(point, match)
+    _active.append(inj)
+    try:
+        yield inj
+    finally:
+        _active.remove(inj)
+
+
+# ---------------------------------------------------------------------------
+# Hooks — called by the runtime at the matching failure point.
+# ---------------------------------------------------------------------------
+
+
+def corrupt_gram(path: str, H):
+    """Gram-read hook (``pipeline._site_gram``): NaN / non-PSD / mildly
+    deficient corruption of the Gram the engine is about to consume.
+    Identity when nothing is armed or ``H`` is None."""
+    if H is None:
+        return H
+    if active("gram_nan", path) is not None:
+        return np.full(np.shape(H), np.nan, np.float32)
+    Ha = np.asarray(H, np.float32)
+    m = Ha.shape[-1]
+    eye = np.eye(m, dtype=np.float32)
+    tr = np.trace(Ha, axis1=-2, axis2=-1)
+    scale = np.asarray(tr / m, np.float32)[..., None, None]
+    if active("gram_non_psd", path) is not None:
+        return Ha - 2.0 * scale * eye
+    if active("gram_jitter", path) is not None:
+        return Ha - 0.03 * scale * eye
+    return H
+
+
+def corrupt_batch(index: int, batch):
+    """Calibration-batch hook (``pipeline.run_calibration``): returns the
+    batch unchanged, a NaN-poisoned copy, or :data:`DROPPED`."""
+    if active("calib_drop", index) is not None:
+        return DROPPED
+    if active("calib_nan", index) is not None:
+        import jax.numpy as jnp
+
+        def poison(leaf):
+            if hasattr(leaf, "dtype") and jnp.issubdtype(
+                    jnp.asarray(leaf).dtype, jnp.floating):
+                return jnp.full(jnp.shape(leaf), jnp.nan,
+                                jnp.asarray(leaf).dtype)
+            return leaf
+        import jax
+        return jax.tree.map(poison, batch)
+    return batch
+
+
+def poison_grams(index: int, store) -> None:
+    """Post-forward hook paired with ``calib_nan``
+    (``pipeline.run_calibration``): NaN-fill the scratch
+    :class:`~repro.utils.GramStore` of batch ``index`` — the Gram-level
+    trace a genuinely non-finite forward pass would leave, independent of
+    whether the batch itself had float leaves to corrupt."""
+    if active("calib_nan", index) is None:
+        return
+    for path in store.grams:
+        store.grams[path] = np.full_like(store.grams[path], np.nan)
+
+
+def truncate_file(path: str, keep_fraction: float = 0.5) -> None:
+    """Truncate ``path`` to ``keep_fraction`` of its size — the torn-write
+    primitive behind ``shard_truncate`` (tests also call it directly)."""
+    size = os.path.getsize(path)
+    with open(path, "rb+") as f:
+        f.truncate(max(int(size * keep_fraction), 1))
+
+
+def post_commit(step_dir: str, step: int) -> None:
+    """Checkpoint-commit hook (``checkpoint.manager.save_tree``): truncate
+    the just-committed shard when ``shard_truncate`` is armed for this
+    step."""
+    if active("shard_truncate", step) is None:
+        return
+    arrays = os.path.join(step_dir, "arrays.npz")
+    if os.path.exists(arrays):
+        truncate_file(arrays)
+
+
+def maybe_kill(point: str, target) -> None:
+    """Hard-death hook (``kill_between_buckets``): SIGKILL this process —
+    no atexit, no signal handler, no flush; the journal's atomic commit is
+    the only thing allowed to survive."""
+    if active(point, target) is None:
+        return
+    os.kill(os.getpid(), signal.SIGKILL)

@@ -160,6 +160,17 @@ def optq_quantize(W: Array, H: Array, cfg: QuantConfig,
     return optq_quantize_core(W, H, cfg, scales, zeros)
 
 
+def cholesky_factor_finite(H: Array, lambda_frac: float = 0.01) -> bool:
+    """Host-side diagnostic: does the *damped* Gram admit a finite Cholesky
+    factor?  ``inv_cholesky_upper`` silently yields NaN on (effectively)
+    non-PSD input and the sweep propagates it into every code of the layer
+    — this is the check the health guards use to name that failure mode
+    (``repro.core.health.diagnose``) instead of reporting a generic
+    non-finite output."""
+    U = inv_cholesky_upper(dampen(jnp.asarray(H, jnp.float32), lambda_frac))
+    return bool(jnp.all(jnp.isfinite(U)))
+
+
 def optq_error(X: Array, W: Array, Qd: Array) -> float:
     """||X(Q - W)||_F — the calibrated objective (for tests/benchmarks)."""
     return float(jnp.linalg.norm(X @ (Qd - W)))

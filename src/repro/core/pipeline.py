@@ -63,6 +63,7 @@ Methods:
 from __future__ import annotations
 
 import dataclasses
+import os
 import warnings
 from typing import Callable, Iterable
 
@@ -70,9 +71,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults, health
 from repro.core.batched import (GRAM_METHODS, LayerTask, bucket_shards,
-                                magr_alpha, plan_buckets, plan_manifest,
-                                quantize_layer_batch)
+                                magr_alpha, make_spec, plan_buckets,
+                                plan_manifest, quantize_layer_batch)
 from repro.core.recipe import QuantRecipe, SiteSpec
 from repro.core.cloq import cloq_init, cloq_site_lora, regularize_gram
 from repro.core.loftq import loftq_init, qlora_init
@@ -147,14 +149,46 @@ def quantizable_linear_paths(params: dict) -> list[str]:
     return sorted(out)
 
 
-def run_calibration(params: dict, cfg: ModelConfig,
-                    batches: Iterable[dict]) -> GramStore:
-    """Eager forward passes accumulating per-linear Grams."""
+def run_calibration(params: dict, cfg: ModelConfig, batches: Iterable[dict],
+                    *, report: "health.HealthReport | None" = None
+                    ) -> GramStore:
+    """Eager forward passes accumulating per-linear Grams.
+
+    Hardened against bad calibration data: every batch accumulates into its
+    own scratch store and is merged only when all Gram updates it produced
+    are finite — a batch with NaN/Inf activations is skipped and logged
+    (``report.event`` + a ``RuntimeWarning``) instead of silently poisoning
+    every downstream site.  Raises when batches were supplied but every one
+    was skipped/dropped: a zero-sample GramStore would make each
+    Gram-consuming site fail individually and far less legibly."""
     eager_cfg = dataclasses.replace(cfg, scan_layers=False, quant=None)
     store = GramStore()
-    with capture_grams(store):
-        for batch in batches:
+    n_in = n_used = 0
+    for i, batch in enumerate(batches):
+        n_in += 1
+        batch = faults.corrupt_batch(i, batch)        # calib_nan/calib_drop
+        if batch is faults.DROPPED:
+            if report is not None:
+                report.event(f"calibration batch {i} dropped")
+            continue
+        scratch = GramStore()
+        with capture_grams(scratch):
             forward(params, eager_cfg, batch)
+        faults.poison_grams(i, scratch)               # calib_nan (post)
+        if not scratch.all_finite():
+            msg = (f"calibration batch {i} produced non-finite activations"
+                   " — batch skipped")
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
+            if report is not None:
+                report.event(msg)
+            continue
+        store.merge(scratch)
+        n_used += 1
+    if n_in and not n_used:
+        raise RuntimeError(
+            f"calibration produced a zero-sample GramStore: all {n_in} "
+            "batches were skipped (non-finite activations) or dropped — "
+            "fix the calibration data, or use a data-free method")
     return store
 
 
@@ -170,6 +204,15 @@ def _scope_for(lin_path: str) -> str:
     return lin_path
 
 
+def _site_gram(store: GramStore, scope_path: str, target: str):
+    """Gram read with the fault-injection hook applied
+    (:func:`repro.core.faults.corrupt_gram`).  Both engines read every
+    site's Gram through here (keyed by the *param* path), so an armed
+    ``gram_*`` injection corrupts the same site identically in each —
+    the cross-engine fault matrix depends on it."""
+    return faults.corrupt_gram(target, store.grams.get(scope_path))
+
+
 def _shared_site_grams(store: GramStore, lin_path: str):
     """Per-site Grams of a weight-shared linear plus their pooled sum."""
     rest = lin_path[len("shared.block."):]          # e.g. attn.q
@@ -180,6 +223,7 @@ def _shared_site_grams(store: GramStore, lin_path: str):
     for sp in site_paths:
         g = store.grams[sp]
         pooled = g.copy() if pooled is None else pooled + g
+    pooled = faults.corrupt_gram(lin_path, pooled)
     return rest, site_paths, pooled
 
 
@@ -204,7 +248,11 @@ def _quantize_one(W: Array, H: Array | None, qspec: QSpec, method: str,
         Wp = magr_preprocess(W, H, alpha=magr_alpha(H, m),
                              iters=20) if qspec.bits <= 4 else W
         Qd, Qc, s, z = optq_quantize(Wp, H, qcfg)
-        A, B = cloq_init(regularize_gram(H), W - Qd, qspec.rank, qspec.split)
+        # one lambda_frac governs both OPTQ's damping (inside optq_quantize)
+        # and CLoQ's Gram regularization — exactly like the batched core, so
+        # the health ladder's re-damp rung reaches every factorization
+        A, B = cloq_init(regularize_gram(H, qcfg.lambda_frac), W - Qd,
+                         qspec.rank, qspec.split)
         return {"qcodes": pack_codes(Qc, qspec.bits), "scales": s, "zeros": z,
                 "lora_a": A, "lora_b": B}
     if method == "gptq":
@@ -259,8 +307,29 @@ def _quantize_model_sequential(eparams: dict, store: GramStore,
                                sites: dict[str, SiteSpec], seed: int,
                                cfg: ModelConfig, new_params: dict,
                                progress: Callable[[str], None] | None,
-                               mesh=None, shard_axis: str = "model") -> None:
+                               mesh=None, shard_axis: str = "model", *,
+                               policy=None, report=None, journal=None,
+                               should_stop=None) -> None:
     assert mesh is None, "quantize_model rejects mesh+sequential up front"
+    assert journal is None, "quantize_model rejects journal+sequential"
+    guarded = policy is not None and policy.enabled
+    if guarded and report is None:
+        report = health.HealthReport()
+
+    def guard(W, H, leaves, sub, site, path, expert=None):
+        """Per-layer health check + ladder: the same criterion, oracle and
+        (W, H, key, spec) as the batched engine's bucket check, so a healed
+        site is bit-identical across engines."""
+        if not guarded:
+            return leaves
+        spec = make_spec(W.shape[0], W.shape[1], site.qspec, site.method,
+                         H is not None)
+        report.checked += 1
+        if health.check_single(W, leaves, spec, policy):
+            return leaves
+        return health.heal_task(W, H, sub, spec, policy, report, path,
+                                expert)
+
     key = jax.random.PRNGKey(seed)
     for i, lin_path in enumerate(quantizable_linear_paths(eparams)):
         # PRNG keys split per quantizable path — skipped sites included —
@@ -282,27 +351,45 @@ def _quantize_model_sequential(eparams: dict, store: GramStore,
                      f"{method}/{qspec.bits}b/r{qspec.rank}")
 
         if W.ndim == 3:        # stacked MoE experts (E, m, n)
-            H = store.grams.get(scope_path)      # (E, D, D) or None
+            H = _site_gram(store, scope_path, lin_path)  # (E, D, D) or None
             E = W.shape[0]
             keys = jax.random.split(sub, E)
             outs = []
             for e in range(E):
                 He = None if H is None else H[e]
-                outs.append(_quantize_one(W[e], He, qspec, method, keys[e]))
+                lv = _quantize_one(W[e], He, qspec, method, keys[e])
+                outs.append(guard(W[e], He, lv, keys[e], site, lin_path, e))
+            if any(o is None for o in outs):
+                # a stacked MoE site is one leaf tree: an expert degraded
+                # to dense forces the whole stacked site dense
+                report.event(f"{lin_path}: expert degraded to dense — "
+                             "whole stacked site left dense")
+                continue
             newlin = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
         elif is_shared:
             # pooled Gram for the shared base; per-site Grams for site LoRA
             rest, site_paths, pooled = _shared_site_grams(store, lin_path)
             newlin = _quantize_one(W, pooled, qspec, method, sub)
+            newlin = guard(W, pooled, newlin, sub, site, lin_path)
+            if newlin is None:
+                continue                       # shared base left dense
             A0, B0 = newlin.pop("lora_a"), newlin.pop("lora_b")
             As, Bs = [], []
             if method == "cloq" and site_paths:
                 # the shared base Qd is identical for every site: hoisted
                 Qd = _shared_base_dequant(newlin, W.shape[0], qspec)
                 for sp in site_paths:
-                    Hs = jnp.asarray(store.grams[sp], jnp.float32)
+                    Hs_raw = faults.corrupt_gram(sp, store.grams[sp])
+                    Hs = jnp.asarray(Hs_raw, jnp.float32)
                     A_s, B_s = cloq_init(regularize_gram(Hs), W - Qd,
                                          qspec.rank, qspec.split)
+                    if guarded and not (
+                            bool(jnp.all(jnp.isfinite(A_s)))
+                            and bool(jnp.all(jnp.isfinite(B_s)))):
+                        A_s, B_s = health.heal_site_lora(
+                            Hs_raw, jnp.asarray(W, jnp.float32) - Qd,
+                            qspec.rank, qspec.split, policy, report,
+                            lin_path, sp)
                     As.append(A_s)
                     Bs.append(B_s)
             else:
@@ -312,9 +399,11 @@ def _quantize_model_sequential(eparams: dict, store: GramStore,
                 _set_site_lora(new_params, rest, jnp.stack(As),
                                jnp.stack(Bs), cfg.dtype)
         else:
-            H = store.grams.get(scope_path)
+            H = _site_gram(store, scope_path, lin_path)
             newlin = _quantize_one(W, H, qspec, method, sub)
-
+            newlin = guard(W, H, newlin, sub, site, lin_path)
+            if newlin is None:
+                continue                       # degraded to dense: keep w
         keep = {k: v for k, v in lin.items()}     # bias etc.
         keep.update(_cast_for_model(newlin, cfg.dtype))
         set_path(new_params, lin_path, keep)
@@ -345,7 +434,7 @@ def _gather_tasks(eparams: dict, store: GramStore,
              "site": site, "tasks": []}
         if W.ndim == 3:        # stacked MoE experts: a natural bucket
             g["kind"] = "moe"
-            H = store.grams.get(_scope_for(lin_path))
+            H = _site_gram(store, _scope_for(lin_path), lin_path)
             keys = jax.random.split(sub, W.shape[0])
             for e in range(W.shape[0]):
                 g["tasks"].append(len(tasks))
@@ -362,7 +451,8 @@ def _gather_tasks(eparams: dict, store: GramStore,
         else:
             g["tasks"].append(len(tasks))
             tasks.append(LayerTask(lin_path, None, W,
-                                   store.grams.get(_scope_for(lin_path)),
+                                   _site_gram(store, _scope_for(lin_path),
+                                              lin_path),
                                    sub, site=site))
         groups.append(g)
     return tasks, groups
@@ -372,17 +462,32 @@ def _quantize_model_batched(eparams: dict, store: GramStore,
                             sites: dict[str, SiteSpec], seed: int,
                             cfg: ModelConfig, new_params: dict,
                             progress: Callable[[str], None] | None,
-                            mesh=None, shard_axis: str = "model") -> None:
+                            mesh=None, shard_axis: str = "model", *,
+                            policy=None, report=None, journal=None,
+                            should_stop=None) -> None:
     tasks, groups = _gather_tasks(eparams, store, sites, seed)
     results = quantize_layer_batch(tasks, progress=progress,
-                                   mesh=mesh, axis=shard_axis)
+                                   mesh=mesh, axis=shard_axis,
+                                   policy=policy, report=report,
+                                   journal=journal, should_stop=should_stop)
+    guarded = policy is not None and policy.enabled
     for g in groups:
         qspec, method = g["site"].qspec, g["site"].method
         if g["kind"] == "moe":
             outs = [results[i] for i in g["tasks"]]
+            if any(o is None for o in outs):
+                # a stacked MoE site is one leaf tree: an expert degraded
+                # to dense forces the whole stacked site dense
+                if report is not None:
+                    report.event(f"{g['path']}: expert degraded to dense "
+                                 "— whole stacked site left dense")
+                continue
             newlin = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
         else:
-            newlin = dict(results[g["tasks"][0]])
+            res = results[g["tasks"][0]]
+            if res is None:
+                continue                      # degraded to dense: keep w
+            newlin = dict(res)
         if g["kind"] == "shared":
             A0, B0 = newlin.pop("lora_a"), newlin.pop("lora_b")
             site_paths = g["site_paths"]
@@ -391,14 +496,29 @@ def _quantize_model_batched(eparams: dict, store: GramStore,
                     W = jnp.asarray(g["W"], jnp.float32)
                     Qd = _shared_base_dequant(newlin, W.shape[0], qspec)
                     dW = W - Qd
-                    Hs = jnp.stack([jnp.asarray(store.grams[sp], jnp.float32)
-                                    for sp in site_paths])
+                    Hs_raw = [faults.corrupt_gram(sp, store.grams[sp])
+                              for sp in site_paths]
+                    Hs = jnp.stack([jnp.asarray(h, jnp.float32)
+                                    for h in Hs_raw])
                     # same plan-time gate as the bucket planner: shard the
                     # per-site solves over the mesh when n divides the axis
                     site_mesh = mesh if bucket_shards(
                         dW.shape[1], method, mesh, shard_axis) > 1 else None
                     As, Bs = cloq_site_lora(Hs, dW, qspec.rank, qspec.split,
                                             mesh=site_mesh, axis=shard_axis)
+                    if guarded:
+                        As_h, Bs_h = np.asarray(As), np.asarray(Bs)
+                        bad = [s for s in range(len(site_paths))
+                               if not (np.isfinite(As_h[s]).all()
+                                       and np.isfinite(Bs_h[s]).all())]
+                        if bad:
+                            As_l, Bs_l = list(As), list(Bs)
+                            for s in bad:
+                                As_l[s], Bs_l[s] = health.heal_site_lora(
+                                    Hs_raw[s], dW, qspec.rank, qspec.split,
+                                    policy, report, g["path"],
+                                    site_paths[s])
+                            As, Bs = jnp.stack(As_l), jnp.stack(Bs_l)
                 else:
                     As = jnp.stack([A0] * len(site_paths))
                     Bs = jnp.stack([B0] * len(site_paths))
@@ -463,7 +583,11 @@ def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
                    method: str | None = None, qspec: QSpec | None = None,
                    seed: int = 0, engine: str = "batched",
                    progress: Callable[[str], None] | None = None,
-                   mesh=None, shard_axis: str = "model"):
+                   mesh=None, shard_axis: str = "model",
+                   policy: "health.HealthPolicy | None" = None,
+                   report: "health.HealthReport | None" = None,
+                   journal_dir: str | None = None,
+                   should_stop: Callable[[], bool] | None = None):
     """Quantize all block linears of ``params``.
 
     ``recipe`` (the primary input — :class:`repro.core.recipe.QuantRecipe`)
@@ -486,11 +610,30 @@ def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
     (:mod:`repro.core.batched`).  Leaves of sharded buckets come back as
     committed sharded arrays; ``lora_a`` stays replicated.
 
+    ``policy`` — the numerical health guards
+    (:class:`repro.core.health.HealthPolicy`), **on by default**: every
+    quantized slice is checked (finiteness + proxy-error blowup vs an RTN
+    baseline) and failing slices walk the degradation ladder instead of
+    landing as NaN leaves.  Pass ``HealthPolicy(enabled=False)`` to opt
+    out.  ``report`` collects the per-site ladder records and run events
+    (one is created internally when omitted; pass your own to inspect it).
+
+    ``journal_dir`` (batched engine only) makes the run resumable: every
+    completed bucket is committed synchronously to a
+    :class:`repro.checkpoint.manager.QuantJournal` under that directory,
+    and a restarted call with the same plan skips committed buckets,
+    returning their leaves bit-identical.  The health report is saved to
+    ``<journal_dir>/health.json``.  ``should_stop`` is polled at every
+    bucket boundary (after the commit); returning True raises
+    :class:`repro.core.health.QuantPreempted` — the clean SIGTERM path of
+    ``launch/train.py``.
+
     Returns (new_params in the input (scan/eager) layout, new_cfg with
     ``quant=`` set to the recipe's default qspec, gram_store).  Skipped
-    sites keep their dense ``w`` leaf; ``linear_apply`` dequantizes each
-    quantized site from its own stored shapes, so mixed bit-widths need no
-    per-site config at apply time."""
+    sites keep their dense ``w`` leaf — as do sites the health ladder
+    degraded to dense; ``linear_apply`` dequantizes each quantized site
+    from its own stored shapes, so mixed bit-widths need no per-site
+    config at apply time."""
     if engine not in _ENGINES:
         raise ValueError(f"unknown engine {engine!r}; options "
                          f"{tuple(_ENGINES)}")
@@ -498,14 +641,28 @@ def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
         # fail before the (expensive) calibration pass, not after
         raise ValueError("mesh sharding is only supported by the batched "
                          "engine; use engine='batched' or drop mesh=")
+    if journal_dir is not None and engine != "batched":
+        raise ValueError("journaled (resumable) quantization requires the "
+                         "batched engine's bucket streaming; use "
+                         "engine='batched' or drop journal_dir=")
+    policy = health.HealthPolicy() if policy is None else policy
+    report = health.HealthReport() if report is None else report
+    journal = None
+    if journal_dir is not None:
+        from repro.checkpoint.manager import QuantJournal
+        journal = QuantJournal(journal_dir)
     recipe = _coerce_recipe(recipe, method, qspec, cfg, "quantize_model")
     eparams = to_eager_params(params, cfg)
     sites = recipe.resolve(quantizable_linear_paths(eparams))
     _check_scan_uniform(sites, cfg)
-    store = run_calibration(eparams, cfg, calib_batches)
+    store = run_calibration(eparams, cfg, calib_batches, report=report)
     new_params = jax.tree.map(lambda a: a, eparams)   # structural copy
     _ENGINES[engine](eparams, store, sites, seed, cfg, new_params,
-                     progress, mesh, shard_axis)
+                     progress, mesh, shard_axis, policy=policy,
+                     report=report, journal=journal,
+                     should_stop=should_stop)
+    if journal_dir is not None:
+        report.save(os.path.join(journal_dir, "health.json"))
     new_cfg = dataclasses.replace(cfg, quant=recipe.qspec)
     if cfg.scan_layers:
         new_params = to_scan_params(new_params, cfg)

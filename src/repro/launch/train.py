@@ -76,6 +76,12 @@ def parse_args(argv=None):
     p.add_argument("--ckpt-dir", default="")
     p.add_argument("--ckpt-every", type=int, default=50)
     p.add_argument("--resume", action="store_true")
+    p.add_argument("--resume-quant", default="", metavar="DIR",
+                   help="journal the quantization pass into DIR (one atomic "
+                        "commit per completed bucket) and, on restart, skip "
+                        "buckets already committed there — resumable "
+                        "quantization for preemptible jobs; the health "
+                        "report lands at DIR/health.json")
     p.add_argument("--straggler-factor", type=float, default=3.0)
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args(argv)
@@ -142,15 +148,39 @@ def main(argv=None) -> int:
         print(f"[allocate] solved in {time.time() - t0:.1f}s")
         print(alloc.summary())
         recipe = alloc.recipe
+    # handlers installed BEFORE quantization: a SIGTERM mid-quantization
+    # must stop the engine at the next bucket boundary (journaled buckets
+    # are already committed), not fall through to the default handler
+    stop = {"flag": False}
+
+    def on_signal(signum, frame):
+        stop["flag"] = True
+
+    signal.signal(signal.SIGTERM, on_signal)
+    signal.signal(signal.SIGINT, on_signal)
+
     manifest = None
     if recipe is not None:
+        from repro.core.health import HealthReport, QuantPreempted
         if calib is None:
             calib = [stream.next_batch() for _ in range(args.calib_batches)]
         t0 = time.time()
-        params, cfg, _ = quantize_model(params, cfg, calib, recipe=recipe)
+        journal_dir = args.resume_quant or None
+        report = HealthReport()
+        try:
+            params, cfg, _ = quantize_model(
+                params, cfg, calib, recipe=recipe, report=report,
+                journal_dir=journal_dir,
+                should_stop=(lambda: stop["flag"]) if journal_dir else None)
+        except QuantPreempted as e:
+            print(f"[preempt-quant] signal received — buckets 0..{e.bucket} "
+                  f"committed to {journal_dir}; rerun with the same "
+                  "--resume-quant to continue")
+            return 0
         print(f"[quantize] {len(recipe.rules)} site rule(s), default "
               f"{recipe.method}/{recipe.qspec.bits}b "
               f"took {time.time() - t0:.1f}s")
+        print(f"[quantize] {report.summary()}")
         # production checkpoints carry the bucket manifest (recipe
         # included) so restores on any mesh can rebuild per-leaf shardings
         # without the planner (checkpoint.manager.manifest_shardings)
@@ -179,14 +209,6 @@ def main(argv=None) -> int:
             start_step = meta["step"]
             print(f"[resume] step {start_step}")
 
-    stop = {"flag": False}
-
-    def on_signal(signum, frame):
-        stop["flag"] = True
-
-    signal.signal(signal.SIGTERM, on_signal)
-    signal.signal(signal.SIGINT, on_signal)
-
     times: list[float] = []
     for step in range(start_step, args.steps):
         t0 = time.time()
@@ -209,10 +231,12 @@ def main(argv=None) -> int:
         if stop["flag"]:
             print(f"[preempt] signal received — checkpointing at {step + 1}")
             if ckpt is not None:
+                # pinned: retention GC must never collect the preemption
+                # checkpoint, however many routine saves follow on restart
                 ckpt.maybe_save(step + 1, state,
                                 {"data": stream.state_dict(),
                                  "step": step + 1}, force=True,
-                                manifest=manifest)
+                                manifest=manifest, pin=True)
                 ckpt.wait()
             return 0
     if ckpt is not None:

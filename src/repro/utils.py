@@ -78,6 +78,24 @@ class GramStore:
     def paths(self) -> list[str]:
         return sorted(self.grams)
 
+    def merge(self, other: "GramStore") -> None:
+        """Accumulate another store's sums into this one (path-wise).
+
+        ``run_calibration`` accumulates each batch into a scratch store and
+        merges it only after a finiteness check, so one bad batch cannot
+        poison the whole run's Grams."""
+        for path, h in other.grams.items():
+            if path in self.grams:
+                self.grams[path] = self.grams[path] + h
+                self.counts[path] += other.counts[path]
+            else:
+                self.grams[path] = np.array(h)
+                self.counts[path] = other.counts[path]
+
+    def all_finite(self) -> bool:
+        """True when every accumulated Gram is fully finite."""
+        return all(np.isfinite(g).all() for g in self.grams.values())
+
 
 def _capture_store() -> GramStore | None:
     return getattr(_state, "capture", None)

@@ -14,3 +14,8 @@ def pytest_configure(config):
         "multidevice: spawns subprocesses with fake XLA devices (slow, "
         "needs spare cores); deselect on constrained runners with "
         '-m "not multidevice"')
+    config.addinivalue_line(
+        "markers",
+        "fault: fault-injection matrix (repro.core.faults) — exercises "
+        "the health-guard ladder, the quantization journal, and torn "
+        'checkpoints; deselect with -m "not fault"')

@@ -114,7 +114,10 @@ def test_checkpoint_roundtrip_and_retention(tmp_path):
         mgr.maybe_save(step, p, {"data": {"step": step, "seed": 0}})
     mgr.wait()
     assert mgr.latest_step() == 3
-    assert len(os.listdir(d)) == 2          # retention kept newest 2
+    # retention kept newest 2 (the atomic writer's tmp/ staging dir
+    # is layout, not a checkpoint)
+    steps = [n for n in os.listdir(d) if n.startswith("step_")]
+    assert sorted(steps) == ["step_00000002", "step_00000003"]
     tree, meta = mgr.restore()
     assert meta["step"] == 3
     for pth, leaf in tree_paths(tree).items():

@@ -25,7 +25,8 @@ REPO = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 
 DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
-DOCTEST_MODULES = ["repro.core.batched", "repro.core.allocate"]
+DOCTEST_MODULES = ["repro.core.batched", "repro.core.allocate",
+                   "repro.core.health", "repro.core.faults"]
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
