@@ -18,9 +18,10 @@ def main(argv=None) -> None:
     p.add_argument("--only", default="")
     args = p.parse_args(argv)
 
-    from benchmarks import (fig2_discrepancy, kernel_bench, table1_finetune,
-                            table7_ab_combos, table8_calib_size,
-                            table9_seqlen, table10_init_cost)
+    from benchmarks import (fig2_discrepancy, kernel_bench, serve_bench,
+                            table1_finetune, table7_ab_combos,
+                            table8_calib_size, table9_seqlen,
+                            table10_init_cost)
 
     entries = [
         ("fig2_discrepancy", fig2_discrepancy.run,
@@ -38,6 +39,9 @@ def main(argv=None) -> None:
                     f"{r['auto_alloc_row']['auto_beats_uniform']}")),
         ("kernel_bench", kernel_bench.run,
          lambda r: f"kernels={len(r['rows'])}"),
+        ("serve_bench", serve_bench.run,
+         lambda r: (f"speedup={r['speedup']},tenants={r['n_tenants']},"
+                    f"parity={r['parity_ok']}")),
     ]
     selected = [e for e in entries
                 if not args.only or e[0] in args.only.split(",")]

@@ -1,0 +1,104 @@
+"""Multi-tenant serving: ONE packed CLoQ base, 8 tenants' adapters:
+
+    PYTHONPATH=src python examples/serve_multitenant.py
+
+Quantizes a tiny dense model with CLoQ, registers 8 tenant adapter pairs
+across two LoRA rank buckets (4 and 8), and serves a mixed request queue
+through the continuous-batching engine — each step runs one fused decode
+per rank bucket, with every request's adapters gathered from the stacked
+registry arrays inside jit.  Mid-run it hot-swaps one tenant's adapters
+(a "redeploy") while other tenants' requests are in flight, then verifies
+the whole batched run against the sequential one-request-at-a-time
+parity oracle: bit-identical tokens, including across the swap.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import quantize_model
+from repro.core.recipe import QuantRecipe
+from repro.models.modules import QSpec
+from repro.models.transformer import ModelConfig, init_params
+from repro.serve import AdapterRegistry, ServeEngine, adapters_from_tree
+from repro.serve.registry import synthesize_adapters
+
+N_TENANTS = 8
+RANKS = (4, 8)                         # two rank buckets, 4 tenants each
+
+
+def main():
+    cfg = ModelConfig(name="serve-demo", family="dense", n_layers=2,
+                      d_model=64, vocab=256, n_heads=4, n_kv_heads=2,
+                      d_ff=128, dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    calib = [{"tokens": np.random.default_rng(0).integers(
+        1, cfg.vocab, (2, 16))}]
+    qp, qcfg = quantize_model(
+        params, cfg, calib,
+        recipe=QuantRecipe.single("cloq", QSpec(bits=4, group_size=16,
+                                                rank=RANKS[0])))[:2]
+
+    # one registry: 8 tenants, round-robin over the two rank buckets
+    reg = AdapterRegistry.from_model(qp, capacity=4)
+    base_ad = adapters_from_tree(qp)
+    tenants = []
+    for i in range(N_TENANTS):
+        name = f"tenant-{i}"
+        reg.register(name, synthesize_adapters(
+            base_ad, RANKS[i % len(RANKS)], seed=100 + i))
+        tenants.append(name)
+    print(f"registered {len(tenants)} tenants in rank buckets "
+          f"{sorted(reg.ranks())} over {len(reg.sites())} adapter sites")
+
+    eng = ServeEngine(qp, qcfg, reg, page_size=4, max_len=24,
+                      bucket_capacity=4)
+    rng = np.random.default_rng(1)
+    reqs = [(tenants[i % N_TENANTS],
+             [int(t) for t in rng.integers(1, 200, 4)],
+             3 if i == 0 else 8)       # tenant-0's request drains first
+            for i in range(12)]
+
+    # serve the first wave; once tenant-0's own request drains, hot-swap
+    # its adapters while the OTHER tenants' requests are still in flight
+    t0 = time.perf_counter()
+    rids = [eng.submit(p, t, mn) for t, p, mn in reqs[:8]]
+    done = set()
+    while rids[0] not in done:
+        done.update(eng.step())
+    new_ad = synthesize_adapters(base_ad, RANKS[0], seed=999)
+    reg.swap("tenant-0", new_ad)       # redeploy tenant-0 mid-serve
+    rids += [eng.submit(p, t, mn) for t, p, mn in reqs[8:]]
+    eng.run()
+    dt = time.perf_counter() - t0
+    out = {i: eng.result(r) for i, r in enumerate(rids)}
+    toks = sum(len(v) for v in out.values())
+    print(f"served {len(reqs)} requests / {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.0f} tok/s) across {eng.steps} engine steps")
+
+    # parity oracle: replay each request alone through fresh engines —
+    # pre-swap requests against the old adapters, post-swap against new
+    reg_ref = AdapterRegistry.from_model(qp, capacity=4)
+    for i, name in enumerate(tenants):
+        reg_ref.register(name, synthesize_adapters(
+            base_ad, RANKS[i % len(RANKS)], seed=100 + i))
+
+    def replay(i):
+        tenant, prompt, max_new = reqs[i]
+        ref = ServeEngine(qp, qcfg, reg_ref, page_size=4, max_len=24,
+                          bucket_capacity=4)
+        rid = ref.submit(prompt, tenant, max_new)
+        ref.run()
+        return ref.result(rid)
+
+    refs = {i: replay(i) for i in range(8)}
+    reg_ref.swap("tenant-0", new_ad)
+    refs.update({i: replay(i) for i in range(8, len(reqs))})
+    assert out == refs, "batched run diverged from sequential replay"
+    print("parity oracle: batched == sequential replay (bit-identical, "
+          "across the hot-swap)")
+
+
+if __name__ == "__main__":
+    main()

@@ -158,6 +158,13 @@ def _list_steps(directory: str) -> list[int]:
     return sorted(steps)
 
 
+def list_steps(directory: str) -> list[int]:
+    """Public step listing (sorted, complete checkpoints only).  The
+    serving adapter registry uses it to enumerate loadable adapter
+    manifests before committing to a crc-verified :func:`restore_tree`."""
+    return _list_steps(directory)
+
+
 def manifest_shardings(manifest: dict, mesh, axis: str | None = None) -> dict:
     """Per-leaf ``NamedSharding``s of a quantized checkpoint, rebuilt from
     its bucket manifest for a **new** mesh — no planner, no model config.

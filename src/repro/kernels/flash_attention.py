@@ -9,6 +9,14 @@ the ~2x theoretical win a lower-triangular grid would add on real TPU.
 
 GQA: the q-head grid index maps to kv head q_head // (Hq // Hkv) via the
 BlockSpec index_map — no repeated K/V materialization.
+
+``lengths`` (B,) adds per-sequence key masking: keys at ``kpos >=
+lengths[b]`` are dropped for every query of sequence ``b``.  This is the
+serving integration point — the paged-KV decode path hands the kernel each
+request's token count so one batch can mix requests at different progress.
+Every sequence must have length >= 1 (an all-masked first block would make
+the online softmax renormalize from nothing); decode always satisfies this
+because the current token is written before attention runs.
 """
 from __future__ import annotations
 
@@ -27,8 +35,12 @@ Array = jax.Array
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc, *,
-            scale, causal, bq, bk, nk):
+def _kernel(*refs, scale, causal, bq, bk, nk, has_lengths):
+    if has_lengths:
+        q_ref, k_ref, v_ref, len_ref, o_ref, m_scr, l_scr, acc = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc = refs
+        len_ref = None
     kb = pl.program_id(2)
     qb = pl.program_id(1)
 
@@ -48,10 +60,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc, *,
         q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
         k = k_ref[0].astype(jnp.float32)                    # (bk, d)
         s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32)
+        kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         if causal:
             qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-            kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             s = jnp.where(kpos <= qpos, s, NEG_INF)
+        if len_ref is not None:
+            s = jnp.where(kpos < len_ref[0, 0], s, NEG_INF)
         m_prev = m_scr[...]                                  # (bq, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -67,16 +81,29 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc, *,
         o_ref[0] = (acc[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _block(size: int, want: int) -> int:
+    """Largest divisor of ``size`` that is <= ``want`` (static shapes need
+    bq | Sq and bk | Sk; serving cache lengths are not always 128-multiples)."""
+    b = min(want, size)
+    while size % b:
+        b -= 1
+    return b
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
-                    bq: int = 128, bk: int = 128,
-                    interpret: bool = True) -> Array:
-    """q (B, Hq, Sq, d); k/v (B, Hkv, Sk, d) -> (B, Hq, Sq, d)."""
+                    bq: int = 128, bk: int = 128, interpret: bool = True,
+                    lengths: Array | None = None) -> Array:
+    """q (B, Hq, Sq, d); k/v (B, Hkv, Sk, d) -> (B, Hq, Sq, d).
+
+    ``lengths`` (B,) int32: optional per-sequence valid key count (keys at
+    ``kpos >= lengths[b]`` are masked for all of b's queries); must be
+    >= 1 everywhere."""
     B, Hq, Sq, d = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
     rep = Hq // Hkv
-    bq = min(bq, Sq)
-    bk = min(bk, Sk)
+    bq = _block(Sq, bq)
+    bk = _block(Sk, bk)
     nq, nk = Sq // bq, Sk // bk
     scale = 1.0 / (d ** 0.5)
 
@@ -87,15 +114,23 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     def kv_map(h, qb, kb):
         return (h // rep, kb, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, bq, d), lambda h, qb, kb: (h, qb, 0)),
+        pl.BlockSpec((1, bk, d), kv_map),
+        pl.BlockSpec((1, bk, d), kv_map),
+    ]
+    operands = [q4, k4, v4]
+    if lengths is not None:
+        lens = jnp.broadcast_to(lengths[:, None].astype(jnp.int32),
+                                (B, Hq)).reshape(B * Hq, 1)
+        in_specs.append(pl.BlockSpec((1, 1), lambda h, qb, kb: (h, 0)))
+        operands.append(lens)
+
     out = pl.pallas_call(
         functools.partial(_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
-                          nk=nk),
+                          nk=nk, has_lengths=lengths is not None),
         grid=(B * Hq, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, bq, d), lambda h, qb, kb: (h, qb, 0)),
-            pl.BlockSpec((1, bk, d), kv_map),
-            pl.BlockSpec((1, bk, d), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bq, d), lambda h, qb, kb: (h, qb, 0)),
         out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, d), q.dtype),
         scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
@@ -104,5 +139,5 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(q4, k4, v4)
+    )(*operands)
     return out.reshape(B, Hq, Sq, d)

@@ -1,12 +1,17 @@
-"""Batched serving driver (continuous-batching lite).
+"""Multi-tenant serving CLI (continuous batching over repro.serve).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m --smoke \
-        --requests 16 --max-new 32
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --requests 16 --max-new 32 --tenants 4 --ranks 8,16
 
-Maintains a fixed slot pool of size ``--batch``; finished sequences (EOS or
-length budget) release slots that are refilled from the request queue —
-the decode step itself always runs at the full static batch (what the
-decode_* dry-run cells lower)."""
+Attention-cache families (dense/moe) serve through
+:class:`repro.serve.engine.ServeEngine`: per-tenant CLoQ adapter pairs in
+an :class:`~repro.serve.registry.AdapterRegistry` (synthetic perturbations
+of the base's calibrated adapters by default; ``--adapter name=DIR`` hot-
+loads real checkpoint manifests), iteration-level admission/retirement,
+rank-bucketed batched adapter einsums, and a paged KV cache.
+
+SSM/hybrid/enc-dec families keep the legacy fixed-slot loop (their decode
+state is not a paged attention cache)."""
 from __future__ import annotations
 
 import argparse
@@ -27,26 +32,7 @@ from repro.models.parallel import LOCAL
 from repro.models.transformer import init_decode_cache, init_params
 
 
-def main(argv=None) -> int:
-    p = argparse.ArgumentParser()
-    p.add_argument("--arch", required=True)
-    p.add_argument("--smoke", action="store_true")
-    p.add_argument("--method", default="cloq")
-    p.add_argument("--recipe", default="",
-                   help="QuantRecipe JSON — or a bucket-manifest JSON "
-                        "embedding one (checkpoint meta / auto-allocated "
-                        "plan); overrides --method/--bits")
-    p.add_argument("--bits", type=int, default=4)
-    p.add_argument("--batch", type=int, default=4)
-    p.add_argument("--cache-len", type=int, default=128)
-    p.add_argument("--requests", type=int, default=8)
-    p.add_argument("--max-new", type=int, default=16)
-    p.add_argument("--seed", type=int, default=0)
-    args = p.parse_args(argv)
-
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(key, cfg)
+def _build_quantized(args, cfg, params):
     recipe = None
     if args.recipe:
         recipe = load_plan(args.recipe)
@@ -64,7 +50,56 @@ def main(argv=None) -> int:
                           d_model=cfg.d_model)
         calib = [TokenStream(dcfg).next_batch()]
         params, cfg, _ = quantize_model(params, cfg, calib, recipe=recipe)
+    return cfg, params
 
+
+def _serve_multitenant(args, cfg, params) -> int:
+    from repro.serve import (AdapterRegistry, ServeEngine,
+                             adapters_from_tree)
+    from repro.serve.registry import synthesize_adapters
+
+    base_ad = adapters_from_tree(params)
+    if not base_ad:
+        return -1                       # no adapter sites -> legacy loop
+    registry = AdapterRegistry.from_model(params, capacity=args.batch)
+    ranks = ([int(r) for r in args.ranks.split(",") if r]
+             or [next(iter(base_ad.values()))["lora_a"].shape[2]])
+    n_tenants = args.tenants or args.batch * len(ranks)
+    tenants = []
+    for i in range(n_tenants):
+        name = f"tenant-{i}"
+        registry.register(name, synthesize_adapters(
+            base_ad, ranks[i % len(ranks)], seed=args.seed + i))
+        tenants.append(name)
+    for spec in args.adapter:           # hot-load real adapter checkpoints
+        name, _, directory = spec.partition("=")
+        registry.load(name, directory)
+        tenants.append(name)
+
+    engine = ServeEngine(params, cfg, registry, page_size=args.page_size,
+                         max_len=args.cache_len, bucket_capacity=args.batch,
+                         use_kernel=args.kernel)
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    rids = [engine.submit([int(rng.integers(1, cfg.vocab))],
+                          tenants[i % len(tenants)], args.max_new)
+            for i in range(args.requests)]
+    out = engine.run()
+    dt = time.time() - t0
+    toks = sum(len(v) for v in out.values())
+    done = sum(1 for r in rids if engine.result(r))
+    lats = sorted(engine.latency(r) for r in rids)
+    p50 = lats[len(lats) // 2]
+    print(f"[serve] {done}/{args.requests} requests, {engine.steps} steps, "
+          f"{toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s), "
+          f"{len(tenants)} tenants, rank buckets {registry.ranks()}, "
+          f"p50 latency {p50 * 1e3:.0f}ms")
+    return 0
+
+
+def _serve_legacy(args, cfg, params) -> int:
+    """Fixed-slot refill loop for families without a paged attention
+    cache (ssm/hybrid/encdec) — the pre-engine serving path."""
     B = args.batch
     cache = init_decode_cache(cfg, B, args.cache_len)
     if cfg.family == "encdec":
@@ -76,7 +111,7 @@ def main(argv=None) -> int:
     queue = [int(rng.integers(1, cfg.vocab)) for _ in range(args.requests)]
     slots = [None] * B             # (request_id, tokens_left) or None
     current = np.zeros((B, 1), np.int32)
-    served, done, req_id = 0, 0, 0
+    done, req_id = 0, 0
     t0 = time.time()
     steps = 0
     while done < args.requests:
@@ -104,6 +139,46 @@ def main(argv=None) -> int:
     print(f"[serve] {done}/{args.requests} requests, {steps} steps, "
           f"{toks} slot-tokens in {dt:.2f}s ({toks / dt:.1f} tok/s)")
     return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--method", default="cloq")
+    p.add_argument("--recipe", default="",
+                   help="QuantRecipe JSON — or a bucket-manifest JSON "
+                        "embedding one (checkpoint meta / auto-allocated "
+                        "plan); overrides --method/--bits")
+    p.add_argument("--bits", type=int, default=4)
+    p.add_argument("--batch", type=int, default=4,
+                   help="slots per rank bucket (legacy loop: slot count)")
+    p.add_argument("--cache-len", type=int, default=128)
+    p.add_argument("--requests", type=int, default=8)
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--tenants", type=int, default=0,
+                   help="synthetic tenants (0 = batch x #ranks)")
+    p.add_argument("--ranks", default="",
+                   help="comma list of adapter ranks, one bucket each "
+                        "(default: the base recipe's rank)")
+    p.add_argument("--page-size", type=int, default=8)
+    p.add_argument("--kernel", action="store_true",
+                   help="Pallas dequant + flash-decode kernels")
+    p.add_argument("--adapter", action="append", default=[],
+                   metavar="NAME=DIR",
+                   help="hot-load a tenant adapter checkpoint (repeatable)")
+    args = p.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    cfg, params = _build_quantized(args, cfg, params)
+
+    if cfg.family in ("dense", "moe") and cfg.scan_layers:
+        rc = _serve_multitenant(args, cfg, params)
+        if rc >= 0:
+            return rc
+    return _serve_legacy(args, cfg, params)
 
 
 if __name__ == "__main__":

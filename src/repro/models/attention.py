@@ -153,24 +153,51 @@ def attn_decode(p, cfg: AttnConfig, x: Array, cache: dict, *,
                 qspec: QSpec | None = None) -> tuple[Array, dict]:
     """Single-token decode. cache = {"k": (B,T,Hkv,hd), "v": ..., "idx": ()}.
 
+    ``idx`` is normally a scalar (every row at the same position); the
+    serving engine's paged-cache path passes a per-request vector (B,) —
+    each row then writes, ropes, and masks at its own position, which is
+    what lets one batch mix requests at different progress.
+
+    With ``qspec.use_kernel`` (full attention only) the masked softmax
+    runs through the Pallas flash kernel's per-sequence ``lengths``
+    operand instead of the dense ``_sdpa`` mask — same math, the serving
+    integration point for the paged KV cache.
+
     With sliding_window, the cache is a ring buffer of size window."""
     B, S, _ = x.shape
     assert S == 1, "decode processes one token"
     idx = cache["idx"]
-    q, k, v = _project_qkv(p, cfg, x, jnp.full((B, 1), idx), qspec)
+    vec = getattr(idx, "ndim", 0) == 1
+    positions = idx[:, None] if vec else jnp.full((B, 1), idx)
+    q, k, v = _project_qkv(p, cfg, x, positions, qspec)
     T = cache["k"].shape[1]
     slot = jnp.mod(idx, T) if cfg.sliding_window else idx
-    K = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                     (0, slot, 0, 0))
-    V = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                     (0, slot, 0, 0))
-    kpos = jnp.arange(T)
-    if cfg.sliding_window:
-        valid = (kpos <= jnp.minimum(idx, T - 1)) | (idx >= T)  # ring full
+    if vec:
+        rows = jnp.arange(B)
+        K = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        V = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
     else:
-        valid = kpos <= idx
-    mask = valid[None, None, None, None, :]
-    out = _sdpa(q, K, V, mask)
+        K = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        V = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    if qspec is not None and qspec.use_kernel and not cfg.sliding_window:
+        from repro.kernels.flash_attention import flash_attention
+        counts = (idx + 1) if vec else jnp.full((B,), idx + 1)
+        out = flash_attention(
+            q.transpose(0, 2, 1, 3), K.transpose(0, 2, 1, 3),
+            V.transpose(0, 2, 1, 3), causal=False,
+            lengths=counts.astype(jnp.int32)).transpose(0, 2, 1, 3)
+    else:
+        kpos = jnp.arange(T)
+        pos = idx[:, None] if vec else idx
+        if cfg.sliding_window:
+            valid = (kpos <= jnp.minimum(pos, T - 1)) | (pos >= T)  # ring full
+        else:
+            valid = kpos <= pos
+        mask = (valid[:, None, None, None, :] if valid.ndim == 2
+                else valid[None, None, None, None, :])
+        out = _sdpa(q, K, V, mask)
     with scope("o"):
         y = linear_apply(p["o"], out.reshape(B, 1, -1).astype(x.dtype), qspec)
     return y, {"k": K, "v": V, "idx": idx + 1}

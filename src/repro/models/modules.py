@@ -106,7 +106,13 @@ def linear_apply(p: dict, x: Array, qspec: QSpec | None = None) -> Array:
     if "lora_a" in p:
         a = p["lora_a"].astype(x.dtype)
         b = p["lora_b"].astype(x.dtype)
-        y = y + (x @ a) @ b.T
+        if a.ndim == 3:
+            # per-request adapters (serving): a (B, m, r), b (B, n, r) —
+            # one gathered einsum over the whole batch, never a row loop
+            y = y + jnp.einsum("bsr,bnr->bsn",
+                               jnp.einsum("bsm,bmr->bsr", x, a), b)
+        else:
+            y = y + (x @ a) @ b.T
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y

@@ -1,0 +1,22 @@
+"""Multi-tenant CLoQ adapter serving: ONE packed quantized base, many
+per-task LoRA adapters, served concurrently (the Punica/S-LoRA shape on
+this engine).
+
+Layout:
+
+* :mod:`repro.serve.registry` — hot-loadable per-tenant adapter stacks,
+  bucketed by LoRA rank, crc32-verified load from checkpoints.
+* :mod:`repro.serve.scheduler` — iteration-level continuous batching
+  (FIFO admission with a page barrier; starvation-free, deterministic).
+* :mod:`repro.serve.kv_cache` — paged KV pools with per-request page
+  tables and freelist reuse.
+* :mod:`repro.serve.engine` — ties the three together under one jitted
+  decode step per rank bucket.
+
+See docs/architecture.md §13 for the walkthrough.
+"""
+from repro.serve.engine import ServeEngine, run_workload            # noqa: F401
+from repro.serve.kv_cache import PageAllocator, pages_needed        # noqa: F401
+from repro.serve.registry import (AdapterError, AdapterRegistry,    # noqa: F401
+                                  adapters_from_tree)
+from repro.serve.scheduler import Scheduler                         # noqa: F401

@@ -1,0 +1,256 @@
+"""Multi-tenant serving engine: continuous batching over one packed base.
+
+One :class:`ServeEngine` owns
+
+* the **packed base** param tree (quantized linears; the base's own LoRA
+  leaves are stripped at every registry site — adapters come exclusively
+  from the :class:`~repro.serve.registry.AdapterRegistry`),
+* the paged KV pools (:mod:`repro.serve.kv_cache`),
+* the continuous-batching :class:`~repro.serve.scheduler.Scheduler`, and
+* ONE jitted decode step, specialized per rank bucket by jax's jit cache
+  (stack shapes differ per rank — same executable-per-static-signature
+  idiom as ``core.batched``).
+
+Each :meth:`step`: the scheduler admits/retires requests, then every
+active rank bucket runs one fused decode — adapters for the bucket's
+requests are gathered from the stacked registry arrays *inside* jit
+(``jnp.take`` over the tenant-slot axis) and applied as one batched
+einsum per site, never a per-request loop.  KV pages are gathered to a
+contiguous per-request view, the new token's KV is scattered back, and
+per-request lengths drive positions/masks, so heterogeneous requests
+(different tenants, ranks, progress) share one device call.
+
+Parity contract (the ``tests/test_serving.py`` oracle): every op in the
+step is row-independent for ``dense`` models, and stale page content is
+masked to an exact-zero softmax weight — so replaying one request alone
+through the same executable reproduces its batched tokens **bit-
+identically**.  MoE models serve fine but capacity-based routing mixes
+rows, so the bitwise oracle applies to ``dense`` only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.parallel import LOCAL
+from repro.models.transformer import decode_step
+from repro.serve.kv_cache import (PageAllocator, extract_token, gather_pages,
+                                  init_pools, pages_needed, scatter_token)
+from repro.serve.registry import AdapterRegistry
+from repro.serve.scheduler import Scheduler
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    tenant: str
+    rank: int
+    ad_slot: int
+    prompt: list
+    max_new: int
+    eos: int | None
+    pos: int = 0                       # tokens fed so far
+    out: list = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_finish: float = 0.0
+
+    def next_token(self) -> int:
+        # teacher-force the prompt, then feed back the last sample
+        return (self.prompt[self.pos] if self.pos < len(self.prompt)
+                else self.out[-1])
+
+
+@functools.lru_cache(maxsize=32)
+def _decode_exec(cfg, sites: tuple):
+    """One jitted serving step per (model config, site set) — cached at
+    module level so every engine instance (and every benchmark rep)
+    shares the same executable; jit's own cache then specializes it per
+    rank-bucket shape signature."""
+
+    def step_fn(base, stacks, ad_slots, k_pool, v_pool, page_tables,
+                lengths, tokens):
+        params = dict(base)
+        params["blocks"] = dict(base["blocks"])
+        for site in sites:
+            keys = site.split(".")
+            node = _copy_to(params["blocks"], keys[:-1])
+            leaf = dict(node[keys[-1]])
+            st = stacks[site]
+            # (L, cap, m, r) -> (L, B, m, r): per-request adapters
+            leaf["lora_a"] = jnp.take(st["lora_a"], ad_slots, axis=1)
+            leaf["lora_b"] = jnp.take(st["lora_b"], ad_slots, axis=1)
+            node[keys[-1]] = leaf
+        K = gather_pages(k_pool, page_tables)
+        V = gather_pages(v_pool, page_tables)
+        cache = {"k": K, "v": V, "idx": lengths}
+        logits, new_cache = decode_step(params, cfg, cache, tokens,
+                                        pctx=LOCAL)
+        newk = extract_token(new_cache["k"], lengths)
+        newv = extract_token(new_cache["v"], lengths)
+        k_pool = scatter_token(k_pool, newk, page_tables, lengths)
+        v_pool = scatter_token(v_pool, newv, page_tables, lengths)
+        nxt = jnp.argmax(logits[:, :cfg.vocab], axis=-1)
+        return nxt.astype(jnp.int32), k_pool, v_pool
+
+    return jax.jit(step_fn)
+
+
+def _copy_to(node: dict, keys: list[str]) -> dict:
+    """Copy nested dicts along a path so splicing never mutates the base."""
+    for k in keys:
+        node[k] = dict(node[k])
+        node = node[k]
+    return node
+
+
+def _strip_adapters(params: dict, sites) -> dict:
+    out = dict(params)
+    out["blocks"] = dict(params["blocks"])
+    for site in sites:
+        keys = site.split(".")
+        node = _copy_to(out["blocks"], keys[:-1])
+        node[keys[-1]] = {k: v for k, v in node[keys[-1]].items()
+                          if k not in ("lora_a", "lora_b")}
+    return out
+
+
+class ServeEngine:
+    def __init__(self, params: dict, cfg, registry: AdapterRegistry, *,
+                 page_size: int = 8, n_pages: int | None = None,
+                 max_len: int = 64, bucket_capacity: int = 4,
+                 use_kernel: bool = False):
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"ServeEngine serves attention-cache families (dense/moe); "
+                f"{cfg.family!r} models use the static-slot loop in "
+                "repro.launch.serve")
+        if not cfg.scan_layers:
+            raise ValueError("ServeEngine needs scan (stacked-layer) params")
+        if cfg.quant is not None:
+            cfg = dataclasses.replace(
+                cfg, quant=dataclasses.replace(cfg.quant,
+                                               use_kernel=use_kernel))
+        self.cfg = cfg
+        self.registry = registry
+        self.bucket_capacity = bucket_capacity
+        self._page = page_size
+        self._maxp = pages_needed(max_len, page_size)
+        self.max_len = self._maxp * page_size
+        if n_pages is None:
+            n_pages = 2 * bucket_capacity * self._maxp + 1
+        self._base = _strip_adapters(params, registry.sites())
+        hd = cfg.head_dim or (cfg.d_model // max(cfg.n_heads, 1))
+        self._k_pool, self._v_pool = init_pools(
+            cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, hd, cfg.dtype)
+        self.scheduler = Scheduler({}, PageAllocator(n_pages))
+        self._reqs: dict[int, _Request] = {}
+        self._next_rid = 0
+        self.steps = 0
+        self._exec = _decode_exec(self.cfg, tuple(self.registry.sites()))
+
+    # -- request lifecycle -------------------------------------------------
+
+    def submit(self, prompt, tenant: str, max_new: int = 16,
+               eos: int | None = None) -> int:
+        rank, ad_slot = self.registry.slot_of(tenant)
+        self.scheduler.ensure_bucket(rank, self.bucket_capacity)
+        prompt = [int(t) for t in prompt]
+        if not prompt or max_new < 1:
+            raise ValueError("need a non-empty prompt and max_new >= 1")
+        n_tok = len(prompt) + max_new - 1
+        if n_tok > self.max_len:
+            raise ValueError(f"request needs {n_tok} cache positions, "
+                             f"engine max_len is {self.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._reqs[rid] = _Request(rid, tenant, rank, ad_slot, prompt,
+                                   max_new, eos, t_submit=time.perf_counter())
+        self.scheduler.submit(rid, rank, pages_needed(n_tok, self._page))
+        return rid
+
+    def step(self) -> list[int]:
+        """One engine iteration; returns rids finished this step."""
+        active = self.scheduler.tick()
+        finished: list[int] = []
+        for rank in sorted(b for b, ent in active.items() if ent):
+            entries = active[rank]
+            stacks = self.registry.stacks(rank)
+            B = self.bucket_capacity
+            ad = np.zeros((B,), np.int32)
+            toks = np.zeros((B, 1), np.int32)
+            lens = np.zeros((B,), np.int32)
+            pt = np.zeros((B, self._maxp), np.int32)
+            for slot, rid in entries:
+                r = self._reqs[rid]
+                ad[slot] = r.ad_slot
+                toks[slot, 0] = r.next_token()
+                lens[slot] = r.pos
+                pages = self.scheduler.pages_of(rid)
+                pt[slot, :len(pages)] = pages
+            nxt, self._k_pool, self._v_pool = self._exec(
+                self._base, stacks, jnp.asarray(ad), self._k_pool,
+                self._v_pool, jnp.asarray(pt), jnp.asarray(lens),
+                jnp.asarray(toks))
+            nxt = np.asarray(nxt)
+            for slot, rid in entries:
+                r = self._reqs[rid]
+                r.pos += 1
+                if r.pos >= len(r.prompt):
+                    tok = int(nxt[slot])
+                    r.out.append(tok)
+                    if len(r.out) >= r.max_new or tok == r.eos:
+                        r.t_finish = time.perf_counter()
+                        self.scheduler.retire(rid)
+                        finished.append(rid)
+        self.steps += 1
+        return finished
+
+    def run(self, max_steps: int | None = None) -> dict[int, list[int]]:
+        """Drive until every submitted request retires."""
+        if max_steps is None:
+            max_steps = self.scheduler.outstanding() * (self.max_len + 2) + 4
+        for _ in range(max_steps):
+            if not self.scheduler.outstanding():
+                break
+            self.step()
+        if self.scheduler.outstanding():
+            raise RuntimeError("scheduler failed to drain the queue "
+                               f"within {max_steps} steps")
+        return {rid: list(r.out) for rid, r in self._reqs.items() if r.out}
+
+    # -- views -------------------------------------------------------------
+
+    def result(self, rid: int) -> list[int]:
+        return list(self._reqs[rid].out)
+
+    def latency(self, rid: int) -> float:
+        r = self._reqs[rid]
+        return r.t_finish - r.t_submit
+
+
+def run_workload(engine: ServeEngine, requests, *,
+                 sequential: bool = False) -> dict[int, list[int]]:
+    """Serve ``[(tenant, prompt, max_new), ...]``; returns {i: tokens}.
+
+    ``sequential=True`` is the parity reference: one request in flight at
+    a time through the SAME engine/executables, so each batched row has a
+    bit-identical single-request replay."""
+    outs: dict[int, list[int]] = {}
+    if sequential:
+        for i, (tenant, prompt, max_new) in enumerate(requests):
+            rid = engine.submit(prompt, tenant, max_new)
+            engine.run()
+            outs[i] = engine.result(rid)
+    else:
+        rids = [engine.submit(prompt, tenant, max_new)
+                for tenant, prompt, max_new in requests]
+        engine.run()
+        outs = {i: engine.result(rid) for i, rid in enumerate(rids)}
+    return outs

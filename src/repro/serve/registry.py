@@ -1,0 +1,241 @@
+"""Adapter registry: many per-task CLoQ adapter pairs over ONE packed base.
+
+The registry owns stacked per-rank device arrays — for each LoRA rank
+``r`` present, one bucket holding every site's adapters for up to
+``capacity`` tenants::
+
+    stacks(r)[site] = {"lora_a": (L, capacity, m, r),
+                       "lora_b": (L, capacity, n, r)}
+
+The engine gathers rows of these stacks by slot index inside its jitted
+decode step (the ``core.batched`` / ``cloq_site_lora`` idiom), so
+register/evict/swap are pure host-side array updates: **base weights are
+never touched**, and a swap becomes visible at the next decode step
+without retracing (same shapes, new arrays).
+
+Loading goes through :func:`repro.checkpoint.manager.restore_tree`, so
+every adapter leaf is crc32-verified on the way in; a checkpoint that is
+not an adapter checkpoint for *this* model (foreign arch, stale shapes)
+raises :class:`AdapterError` with one legible message instead of a shape
+crash deep in jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import list_steps, restore_tree
+from repro.utils import get_path, tree_paths
+
+Array = jax.Array
+
+
+class AdapterError(ValueError):
+    """A tenant adapter set that cannot be served over this base."""
+
+
+def adapters_from_tree(params: dict) -> dict[str, dict[str, np.ndarray]]:
+    """Extract ``{site: {"lora_a": (L, m, r), "lora_b": (L, n, r)}}`` from a
+    scan-layout param tree (sites are dot-paths under ``blocks``, e.g.
+    ``"attn.q"``)."""
+    blocks = params.get("blocks")
+    if blocks is None:
+        return {}
+    out: dict[str, dict[str, np.ndarray]] = {}
+    for path, leaf in tree_paths(blocks).items():
+        if path.endswith(".lora_a") and getattr(leaf, "ndim", 0) == 3:
+            site = path[: -len(".lora_a")]
+            node = get_path(blocks, site)
+            if "lora_b" in node:
+                out[site] = {"lora_a": np.asarray(leaf),
+                             "lora_b": np.asarray(node["lora_b"])}
+    return out
+
+
+def synthesize_adapters(base: dict, rank: int, seed: int,
+                        scale: float = 0.02) -> dict:
+    """Deterministic stand-in for a per-task finetuned adapter set.
+
+    Perturbs the base model's calibrated CLoQ adapters (same rank) or
+    draws a fresh LoRA pair at a different ``rank`` — used by the CLI,
+    the serving benchmark, and the example to populate tenants without
+    shipping real finetuned checkpoints."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for site in sorted(base):
+        a0 = np.asarray(base[site]["lora_a"], np.float32)
+        b0 = np.asarray(base[site]["lora_b"], np.float32)
+        L, m, r0 = a0.shape
+        n = b0.shape[1]
+        if rank == r0:
+            a = a0 + rng.normal(0, scale, a0.shape)
+            b = b0 + rng.normal(0, scale, b0.shape)
+        else:
+            a = rng.normal(0, 1.0 / np.sqrt(m), (L, m, rank))
+            b = rng.normal(0, scale, (L, n, rank))
+        out[site] = {"lora_a": a.astype(np.float32),
+                     "lora_b": b.astype(np.float32)}
+    return out
+
+
+@dataclasses.dataclass
+class _RankBucket:
+    rank: int
+    capacity: int
+    stacks: dict                      # site -> {"lora_a": ..., "lora_b": ...}
+    slots: list                       # slot -> tenant name or None
+
+
+class AdapterRegistry:
+    """Hot-loadable per-task adapters, bucketed by LoRA rank.
+
+    ``template``: ``{site: (L, m, n)}`` — the base model's adapter sites
+    and their rank-independent shapes, used to validate every incoming
+    adapter set."""
+
+    def __init__(self, template: dict[str, tuple[int, int, int]], *,
+                 capacity: int = 4, dtype=jnp.float32):
+        if not template:
+            raise AdapterError("base model exposes no LoRA adapter sites")
+        self.template = dict(template)
+        self.capacity = capacity
+        self.dtype = dtype
+        self._buckets: dict[int, _RankBucket] = {}
+        self._tenants: dict[str, tuple[int, int]] = {}   # name -> (rank, slot)
+
+    @classmethod
+    def from_model(cls, params: dict, *, capacity: int = 4,
+                   dtype=jnp.float32) -> "AdapterRegistry":
+        sites = adapters_from_tree(params)
+        template = {site: (ad["lora_a"].shape[0], ad["lora_a"].shape[1],
+                           ad["lora_b"].shape[1])
+                    for site, ad in sites.items()}
+        return cls(template, capacity=capacity, dtype=dtype)
+
+    # -- validation --------------------------------------------------------
+
+    def _validate(self, name: str, adapters: dict, origin: str = "") -> int:
+        src = f" (from {origin})" if origin else ""
+        if set(adapters) != set(self.template):
+            raise AdapterError(
+                f"adapter set {name!r}{src} does not cover this model's "
+                f"sites: has {sorted(adapters)}, base expects "
+                f"{sorted(self.template)} — foreign or stale checkpoint?")
+        ranks = set()
+        for site, (L, m, n) in self.template.items():
+            a, b = adapters[site]["lora_a"], adapters[site]["lora_b"]
+            if a.ndim != 3 or b.ndim != 3 or a.shape[:2] != (L, m) \
+                    or b.shape[:2] != (L, n) or a.shape[2] != b.shape[2]:
+                raise AdapterError(
+                    f"adapter set {name!r}{src} site {site!r}: lora_a "
+                    f"{tuple(a.shape)} / lora_b {tuple(b.shape)} do not "
+                    f"match base site (layers={L}, in={m}, out={n}) — "
+                    "foreign or stale checkpoint?")
+            ranks.add(int(a.shape[2]))
+        if len(ranks) != 1:
+            raise AdapterError(
+                f"adapter set {name!r}{src} mixes ranks {sorted(ranks)}; "
+                "one tenant = one rank bucket")
+        return ranks.pop()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def _bucket(self, rank: int) -> _RankBucket:
+        if rank not in self._buckets:
+            stacks = {}
+            for site, (L, m, n) in self.template.items():
+                stacks[site] = {
+                    "lora_a": jnp.zeros((L, self.capacity, m, rank),
+                                        self.dtype),
+                    "lora_b": jnp.zeros((L, self.capacity, n, rank),
+                                        self.dtype)}
+            self._buckets[rank] = _RankBucket(rank, self.capacity, stacks,
+                                              [None] * self.capacity)
+        return self._buckets[rank]
+
+    def _write_slot(self, bucket: _RankBucket, slot: int,
+                    adapters: dict | None) -> None:
+        for site in self.template:
+            for leaf in ("lora_a", "lora_b"):
+                st = bucket.stacks[site][leaf]
+                val = (jnp.zeros(st.shape[2:], st.dtype) if adapters is None
+                       else jnp.asarray(adapters[site][leaf], st.dtype))
+                bucket.stacks[site][leaf] = st.at[:, slot].set(val)
+
+    def register(self, name: str, adapters: dict, origin: str = "") -> int:
+        """Add a tenant; returns its slot within its rank bucket."""
+        if name in self._tenants:
+            raise AdapterError(f"tenant {name!r} already registered "
+                               "(use swap() or evict() first)")
+        rank = self._validate(name, adapters, origin)
+        bucket = self._bucket(rank)
+        if None not in bucket.slots:
+            raise AdapterError(
+                f"rank-{rank} bucket is full ({bucket.capacity} tenants); "
+                "evict one first")
+        slot = bucket.slots.index(None)
+        self._write_slot(bucket, slot, adapters)
+        bucket.slots[slot] = name
+        self._tenants[name] = (rank, slot)
+        return slot
+
+    def load(self, name: str, directory: str, step: int | None = None) -> int:
+        """Register a tenant from a checkpoint (crc32-verified restore)."""
+        if not list_steps(directory):
+            raise AdapterError(
+                f"no complete checkpoint steps under {directory} — "
+                "nothing to load an adapter set from")
+        tree, _meta = restore_tree(directory, step)
+        sub = tree if "blocks" in tree else tree.get("train", tree)
+        adapters = adapters_from_tree(sub if isinstance(sub, dict) else {})
+        if not adapters:
+            raise AdapterError(
+                f"checkpoint {directory} carries no stacked LoRA adapter "
+                "leaves (blocks.*.lora_a/lora_b) — not an adapter "
+                "checkpoint for this model")
+        return self.register(name, adapters, origin=directory)
+
+    def swap(self, name: str, adapters: dict, origin: str = "") -> int:
+        """Replace a tenant's adapters in place.  Same rank keeps the slot
+        (safe mid-serve: in-flight requests of OTHER tenants are untouched;
+        this tenant's next admitted request sees the new weights).  A rank
+        change re-buckets via evict+register, which requires the tenant to
+        have no in-flight requests."""
+        if name not in self._tenants:
+            raise AdapterError(f"tenant {name!r} is not registered")
+        rank = self._validate(name, adapters, origin)
+        old_rank, slot = self._tenants[name]
+        if rank == old_rank:
+            self._write_slot(self._buckets[rank], slot, adapters)
+            return slot
+        self.evict(name)
+        return self.register(name, adapters, origin)
+
+    def evict(self, name: str) -> None:
+        rank, slot = self._tenants.pop(name)
+        bucket = self._buckets[rank]
+        self._write_slot(bucket, slot, None)     # zero: stale weights die
+        bucket.slots[slot] = None
+
+    # -- views -------------------------------------------------------------
+
+    def slot_of(self, name: str) -> tuple[int, int]:
+        """(rank, slot) for a tenant."""
+        if name not in self._tenants:
+            raise AdapterError(f"tenant {name!r} is not registered")
+        return self._tenants[name]
+
+    def stacks(self, rank: int) -> dict:
+        return self._buckets[rank].stacks
+
+    def ranks(self) -> list[int]:
+        return sorted(self._buckets)
+
+    def tenants(self) -> dict[str, tuple[int, int]]:
+        return dict(self._tenants)
+
+    def sites(self) -> list[str]:
+        return sorted(self.template)

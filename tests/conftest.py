@@ -19,3 +19,8 @@ def pytest_configure(config):
         "fault: fault-injection matrix (repro.core.faults) — exercises "
         "the health-guard ladder, the quantization journal, and torn "
         'checkpoints; deselect with -m "not fault"')
+    config.addinivalue_line(
+        "markers",
+        "serving: multi-tenant serving engine (repro.serve) — parity "
+        "oracle + scheduler property tests; runs on CPU in the default "
+        "suite (interpret-mode kernels, no backend gates)")

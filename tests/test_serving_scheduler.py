@@ -1,0 +1,162 @@
+"""Property tests for the continuous-batching scheduler and the KV page
+freelist (hypothesis via tests/_hypothesis_compat.py — deterministic
+mini-runner when hypothesis is absent).
+
+Properties: every admitted request retires exactly once (conservation),
+no starvation under adversarial arrival orders (the FIFO page barrier),
+the freelist never double-allocates or leaks, and schedules are
+deterministic for a fixed workload."""
+import numpy as np
+import pytest
+
+from repro.serve.kv_cache import PageAllocator
+from repro.serve.scheduler import Scheduler
+from tests._hypothesis_compat import given, settings, st
+
+pytestmark = pytest.mark.serving
+
+BUCKETS = (4, 8)
+CAPACITIES = {4: 2, 8: 2}
+N_PAGES = 8
+
+
+@st.composite
+def workloads(draw):
+    """[(bucket, n_pages, service_steps)], arrival tick per request."""
+    n = draw(st.integers(2, 10))
+    reqs, arrival = [], []
+    for _ in range(n):
+        reqs.append((draw(st.sampled_from(BUCKETS)),
+                     draw(st.integers(1, 3)),
+                     draw(st.integers(1, 6))))
+        arrival.append(draw(st.integers(0, 5)))
+    return reqs, arrival
+
+
+def _drive(reqs, arrival, n_pages=N_PAGES, check_each_tick=True):
+    """Simulate the engine loop: submit at arrival ticks, tick, serve one
+    step per active request, retire when served.  Returns (scheduler,
+    allocator, finish_tick[rid])."""
+    alloc = PageAllocator(n_pages)
+    sched = Scheduler(CAPACITIES, alloc)
+    remaining: dict[int, int] = {}
+    finish: dict[int, int] = {}
+    t = 0
+    while len(sched.retired) < len(reqs):
+        assert t < 10 * sum(r[2] for r in reqs) + 20, \
+            f"starved: only {len(sched.retired)}/{len(reqs)} retired"
+        for i, (bucket, pages, _svc) in enumerate(reqs):
+            if arrival[i] == t:
+                sched.submit(i, bucket, pages)
+                remaining[i] = reqs[i][2]
+        active = sched.tick()
+        for bucket, entries in active.items():
+            for _slot, rid in entries:
+                remaining[rid] -= 1
+                if remaining[rid] <= 0:
+                    sched.retire(rid)
+                    finish[rid] = t
+        if check_each_tick:
+            alloc.check()
+        t += 1
+    return sched, alloc, finish
+
+
+@settings(deadline=None, max_examples=25)
+@given(workloads())
+def test_conservation_every_request_retires_exactly_once(workload):
+    reqs, arrival = workload
+    sched, _, _ = _drive(reqs, arrival)
+    assert sorted(sched.retired) == list(range(len(reqs)))
+    assert len(set(sched.retired)) == len(reqs)
+    assert sched.outstanding() == 0
+
+
+@settings(deadline=None, max_examples=25)
+@given(workloads())
+def test_no_starvation_and_freelist_clean(workload):
+    """_drive asserts completion within a linear bound (starvation guard)
+    and checks freelist invariants after every tick; afterwards every
+    page must be back on the freelist."""
+    reqs, arrival = workload
+    _, alloc, finish = _drive(reqs, arrival)
+    assert alloc.n_free == alloc.n_usable
+    assert set(finish) == set(range(len(reqs)))
+
+
+@settings(deadline=None, max_examples=25)
+@given(workloads())
+def test_deterministic_schedule(workload):
+    reqs, arrival = workload
+    s1, _, f1 = _drive(reqs, arrival)
+    s2, _, f2 = _drive(reqs, arrival)
+    assert s1.trace == s2.trace
+    assert f1 == f2
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 10_000))
+def test_allocator_random_ops_never_double_allocate_or_leak(seed):
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(9)
+    live: list[int] = []
+    owned_pages: dict[int, list[int]] = {}
+    for op in range(60):
+        if live and rng.random() < 0.4:
+            owner = live.pop(int(rng.integers(len(live))))
+            alloc.free(owner)
+            owned_pages.pop(owner)
+        else:
+            n = int(rng.integers(1, 4))
+            if alloc.can_alloc(n):
+                pages = alloc.alloc(op, n)
+                assert 0 not in pages           # scratch page never leaves
+                for other in owned_pages.values():
+                    assert not set(pages) & set(other)
+                live.append(op)
+                owned_pages[op] = pages
+        alloc.check()
+    for owner in live:
+        alloc.free(owner)
+    alloc.check()
+    assert alloc.n_free == alloc.n_usable
+
+
+def test_page_barrier_prevents_overtaking_starvation():
+    """A big request at the head cannot be starved by small ones arriving
+    behind it: once it has a slot but no pages, admission halts entirely
+    until pages free up, and it is admitted first."""
+    alloc = PageAllocator(5)                    # 4 usable pages
+    sched = Scheduler({8: 2}, alloc)
+    sched.submit("big0", 8, 2)
+    sched.tick()                                # big0 active, holds 2 pages
+    sched.submit("big1", 8, 3)                  # needs 3, only 2 free
+    sched.submit("small", 8, 1)                 # would fit — must NOT pass
+    active = sched.tick()
+    assert [rid for _s, rid in active[8]] == ["big0"]
+    sched.retire("big0")
+    active = sched.tick()                       # pages freed: FIFO order
+    assert sorted(rid for _s, rid in active[8]) == ["big1", "small"]
+    assert sched.submitted.index("big1") < sched.submitted.index("small")
+
+
+def test_pages_reserved_for_request_lifetime():
+    alloc = PageAllocator(6)
+    sched = Scheduler({4: 1}, alloc)
+    sched.submit(0, 4, 3)
+    sched.tick()
+    held = sched.pages_of(0)
+    assert len(held) == 3 and alloc.owned(0) == held
+    for _ in range(4):                          # pages pinned across ticks
+        sched.tick()
+        assert alloc.owned(0) == held
+    sched.retire(0)
+    assert alloc.n_free == alloc.n_usable
+
+
+def test_oversized_request_rejected_legibly():
+    sched = Scheduler({4: 1}, PageAllocator(4))
+    with pytest.raises(ValueError, match="KV pages"):
+        sched.submit(0, 4, 99)
+    with pytest.raises(KeyError):
+        sched.submit(0, 16, 1)                  # unknown bucket

@@ -26,7 +26,9 @@ sys.path.insert(0, str(REPO / "src"))
 
 DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
 DOCTEST_MODULES = ["repro.core.batched", "repro.core.allocate",
-                   "repro.core.health", "repro.core.faults"]
+                   "repro.core.health", "repro.core.faults",
+                   "repro.serve", "repro.serve.kv_cache",
+                   "repro.serve.scheduler"]
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
