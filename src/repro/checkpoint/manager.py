@@ -35,6 +35,7 @@ import os
 import shutil
 import threading
 import time
+import warnings
 import zlib
 
 import jax
@@ -165,26 +166,34 @@ def list_steps(directory: str) -> list[int]:
     return _list_steps(directory)
 
 
-def manifest_shardings(manifest: dict, mesh, axis: str | None = None) -> dict:
+def manifest_shardings(manifest: dict, mesh, axis: str | None = None,
+                       cost_model=None) -> dict:
     """Per-leaf ``NamedSharding``s of a quantized checkpoint, rebuilt from
     its bucket manifest for a **new** mesh — no planner, no model config.
 
-    Shard counts are re-resolved against ``mesh``
-    (``repro.core.batched.bucket_shards`` on each bucket's ``(n, method)``
-    — the manifest's saved ``n_shards`` belong to the save-time mesh), so a
+    Shard counts are re-resolved against ``mesh``: through
+    ``cost_model.decide_geometry`` (the very decision rule the planner
+    used — :class:`repro.core.costmodel.CostModel`) when a cost model is
+    given, else through the divisibility gate
+    (``repro.core.batched.bucket_shards``) — the manifest's saved
+    ``n_shards``/``exec_path`` belong to the save-time mesh, so a
     checkpoint taken on D devices restores column-sharded onto D' devices,
-    with non-divisible buckets falling back to replicated.  Returns a flat
-    ``{dot.path.leaf: NamedSharding}`` dict consumable by
-    :func:`restore_tree`'s ``shardings=``; entries for leaves absent from
-    the tree (e.g. the shared block's relocated adapters) are ignored by
-    the restore."""
+    with non-divisible buckets falling back to replicated.  When the
+    restore-time choice differs from the save-time manifest, ONE warning
+    is emitted naming the re-laid buckets (instead of silently diverging
+    from a fresh plan).  Returns a flat ``{dot.path.leaf: NamedSharding}``
+    dict consumable by :func:`restore_tree`'s ``shardings=``; entries for
+    leaves absent from the tree (e.g. the shared block's relocated
+    adapters) are ignored by the restore."""
     from jax.sharding import NamedSharding
     from jax.sharding import PartitionSpec as P
-    from repro.core.batched import bucket_shards, task_leaf_specs
+    from repro.core.batched import (bucket_axis_size, bucket_shards,
+                                    task_leaf_specs)
 
     axis = axis or manifest.get("axis", "model")
     stacked = set(manifest.get("stacked", ()))
     out: dict = {}
+    diverged: list[str] = []
     # weight-shared per-site adapter stacks (shared.site_lora.<name>): the
     # engine lays them out like any other task's adapters under an extra
     # unsharded leading site dim — lora_b column-sharded when the column
@@ -198,7 +207,22 @@ def manifest_shardings(manifest: dict, mesh, axis: str | None = None) -> dict:
                 NamedSharding(mesh, P(*specs[leaf]))
     for bucket in manifest["buckets"]:
         spec = bucket["spec"]
-        k = bucket_shards(spec["n"], spec["method"], mesh, axis)
+        if cost_model is not None:
+            path, k = cost_model.decide_geometry(
+                spec["method"], m=spec["m"], n=spec["n"],
+                L=max(len(bucket.get("tasks", ())), 1),
+                k=bucket_axis_size(mesh, axis), rank=spec.get("rank", 16),
+                has_gram=spec.get("has_gram"))
+        else:
+            k = bucket_shards(spec["n"], spec["method"], mesh, axis)
+            path = "sharded" if k > 1 else "replicated"
+        saved_k = int(spec.get("n_shards", 1))
+        saved_path = spec.get("exec_path",
+                              "sharded" if saved_k > 1 else "replicated")
+        if (k, path) != (saved_k, saved_path):
+            diverged.append(
+                f"{spec['method']}/{spec['bits']}b {spec['m']}x{spec['n']}: "
+                f"saved {saved_path} x{saved_k} -> restored {path} x{k}")
         ax = axis if k > 1 else None
         for task in bucket["tasks"]:
             lead = 0 if task["expert"] is None else 1
@@ -213,18 +237,34 @@ def manifest_shardings(manifest: dict, mesh, axis: str | None = None) -> dict:
                 for leaf, sp in task_leaf_specs(spec["method"], ax,
                                                 lead=ld).items():
                     out[f"{path}.{leaf}"] = NamedSharding(mesh, P(*sp))
+    if diverged:
+        shown = "; ".join(diverged[:3])
+        more = f" (+{len(diverged) - 3} more)" if len(diverged) > 3 else ""
+        warnings.warn(
+            f"restore-time bucket layout differs from the save-time "
+            f"manifest for {len(diverged)} bucket(s): {shown}{more} — "
+            "re-resolved against the target mesh"
+            + ("/cost model" if cost_model is not None else "")
+            + "; results are identical, only the sharding layout moved",
+            RuntimeWarning, stacklevel=2)
     return out
 
 
 def restore_tree(directory: str, step: int | None = None, *,
-                 shardings=None, mesh=None, axis: str | None = None):
+                 shardings=None, mesh=None, axis: str | None = None,
+                 cost_model=None):
     """Load (tree, meta). ``shardings``: optional pytree of NamedSharding to
     re-place leaves onto a (possibly different) mesh — elastic restart.
 
     ``mesh`` (with no explicit ``shardings``): rebuild the quantized
     leaves' shardings for that mesh directly from the checkpoint's bucket
     manifest (saved via ``save_tree(manifest=...)``) — the planner is
-    skipped entirely.  A checkpoint without a manifest restores unsharded."""
+    skipped entirely.  A checkpoint without a manifest restores unsharded.
+
+    ``cost_model``: optional :class:`repro.core.costmodel.CostModel` — the
+    manifest layout is then re-decided by predicted time exactly as the
+    planner would (see :func:`manifest_shardings`); a layout differing
+    from the save-time manifest is reported by one warning either way."""
     steps = _list_steps(directory)
     if not steps:
         raise FileNotFoundError(f"no checkpoints under {directory}")
@@ -243,7 +283,8 @@ def restore_tree(directory: str, step: int | None = None, *,
             f"corrupt archive): {e!r} — delete step_{step:08d} and restore "
             "an earlier step") from e
     if shardings is None and mesh is not None and MANIFEST_KEY in meta:
-        shardings = manifest_shardings(meta[MANIFEST_KEY], mesh, axis)
+        shardings = manifest_shardings(meta[MANIFEST_KEY], mesh, axis,
+                                       cost_model=cost_model)
     tree: dict = {}
     for key in files:
         leaf_name = key[: -len(_BF16_TAG)] if key.endswith(_BF16_TAG) else key
@@ -306,10 +347,10 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def restore(self, step: int | None = None, shardings=None, mesh=None,
-                axis: str | None = None):
+                axis: str | None = None, cost_model=None):
         self.wait()
         return restore_tree(self.directory, step, shardings=shardings,
-                            mesh=mesh, axis=axis)
+                            mesh=mesh, axis=axis, cost_model=cost_model)
 
     def _gc(self) -> None:
         steps = _list_steps(self.directory)

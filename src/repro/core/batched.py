@@ -84,18 +84,34 @@ GRAM_METHODS = ("cloq", "gptq")
 _REPLICATED_METHODS: tuple[str, ...] = ()
 
 
+def bucket_axis_size(mesh, axis: str = "model") -> int:
+    """Size of the mesh's ``axis`` (``1`` when there is no mesh or the
+    mesh doesn't carry the axis) — the candidate shard count the planner
+    and the cost model both reason about.
+
+    >>> bucket_axis_size(None)
+    1
+    """
+    if mesh is None or axis not in getattr(mesh, "axis_names", ()):
+        return 1
+    return int(mesh.shape[axis])
+
+
 def bucket_shards(n: int, method: str, mesh=None,
                   axis: str = "model") -> int:
     """Column-shard count the planner assigns a bucket: the ``axis`` size of
     ``mesh`` when ``n`` divides it (and the method is not forced replicated
     — currently none is), else ``1`` (replicated fallback).
 
+    This is the *divisibility gate* only; with a cost model the planner
+    further re-decides each bucket's path from predicted time
+    (:func:`apply_cost_model`), and may keep a divisible bucket replicated
+    when its collectives would dominate.
+
     >>> bucket_shards(48, "cloq", mesh=None)
     1
     """
-    if mesh is None or axis not in getattr(mesh, "axis_names", ()):
-        return 1
-    k = int(mesh.shape[axis])
+    k = bucket_axis_size(mesh, axis)
     if k <= 1 or method in _REPLICATED_METHODS or n % k != 0:
         return 1
     return k
@@ -119,6 +135,12 @@ class BucketSpec:
     magr_iters: int
     has_gram: bool
     n_shards: int = 1        # column shards over the model axis (1 = local)
+    # execution path the planner chose for the bucket: "replicated" (one
+    # local jit(vmap) dispatch), "sharded" (one shard_map(vmap) dispatch,
+    # n_shards > 1), or "sequential" (L per-layer dispatches — picked only
+    # by the cost model's memory gate).  Recorded in the serialized bucket
+    # manifest so restore and the health requeue replay the same decision.
+    exec_path: str = "replicated"
 
 
 @dataclasses.dataclass
@@ -170,6 +192,7 @@ def make_spec(m: int, n: int, qspec, method: str, has_gram: bool,
     ``tr(E^T H E)`` is weighted by the same calibration data, even for
     methods whose quantization itself is data-free."""
     base = base or QuantConfig(bits=qspec.bits, group_size=qspec.group_size)
+    k = bucket_shards(n, method, mesh, axis)
     return BucketSpec(
         m=m, n=n, method=method, bits=qspec.bits,
         group_size=qspec.group_size, rank=qspec.rank, split=qspec.split,
@@ -178,7 +201,7 @@ def make_spec(m: int, n: int, qspec, method: str, has_gram: bool,
         magr=(method == "cloq" and qspec.bits <= 4),
         magr_iters=base.magr_iters,
         has_gram=has_gram and (for_eval or method in GRAM_METHODS),
-        n_shards=bucket_shards(n, method, mesh, axis))
+        n_shards=k, exec_path="sharded" if k > 1 else "replicated")
 
 
 def magr_alpha(H: Array, m: int) -> Array:
@@ -329,6 +352,44 @@ def run_bucket(Ws: Array, Hs: Array | None, keys: Array,
             lambda W, k: quantize_single(W, None, k, spec))(Ws, keys)
     return jax.vmap(
         lambda W, H, k: quantize_single(W, H, k, spec))(Ws, Hs, keys)
+
+
+def bucket_fn(spec: BucketSpec):
+    """The (untraced) bucket program of :func:`run_bucket` as a plain
+    function — what the persisted compile cache lowers, serializes, and
+    reloads (:class:`repro.core.compile_cache.CompileCache`).  Positional
+    signature: ``(Ws, Hs, keys)`` when the spec carries a Gram, else
+    ``(Ws, keys)``."""
+    if spec.has_gram:
+        def fn(Ws, Hs, keys):
+            return jax.vmap(
+                lambda W, H, k: quantize_single(W, H, k, spec))(Ws, Hs, keys)
+    else:
+        def fn(Ws, keys):
+            return jax.vmap(
+                lambda W, k: quantize_single(W, None, k, spec))(Ws, keys)
+    return fn
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def _run_single(W: Array, H: Array | None, key: Array,
+                spec: BucketSpec) -> dict:
+    return quantize_single(W, H, key, spec)
+
+
+def run_bucket_sequential(Ws: Array, Hs: Array | None, keys: Array,
+                          spec: BucketSpec) -> dict:
+    """Per-layer execution of one bucket: ``L`` dispatches of the jitted
+    single-layer core, outputs stacked to :func:`run_bucket`'s layout.
+
+    The cost model picks this path only through its memory gate — a
+    bucket whose stacked ``(L, m, n)`` working set exceeds the calibrated
+    budget would thrash if vmapped, so it trades ``L`` dispatch overheads
+    for peak memory ``1/L`` of the fused path."""
+    outs = [_run_single(Ws[j], None if Hs is None else Hs[j], keys[j],
+                        requeue_spec(spec))
+            for j in range(Ws.shape[0])]
+    return {k: jnp.stack([o[k] for o in outs]) for k in outs[0]}
 
 
 @partial(jax.jit, static_argnames=("spec",))
@@ -506,10 +567,52 @@ def per_layer_sharded_dispatch(tasks: list[LayerTask], qspec, mesh,
     return outs
 
 
+def apply_cost_model(buckets: dict[BucketSpec, list[int]], cost_model, *,
+                     mesh=None,
+                     axis: str = "model") -> dict[BucketSpec, list[int]]:
+    """Re-decide each planned bucket's execution path from predicted time.
+
+    The divisibility-planned ``buckets`` (whose bucket *membership* is
+    final — path choice never changes which tasks group together) are
+    re-specced by ``cost_model.decide(spec, L, k)`` (see
+    :class:`repro.core.costmodel.CostModel`): each bucket picks
+    replicated / sharded / sequential from the calibrated
+    flops/bytes/collective estimate, now that the bucket size ``L`` is
+    known.  Insertion order is preserved.  ``cost_model=None`` is the
+    identity (legacy divisibility-only planning)."""
+    if cost_model is None:
+        return buckets
+    k = bucket_axis_size(mesh, axis)
+    out: dict[BucketSpec, list[int]] = {}
+    for spec, idxs in buckets.items():
+        k_eff = 1 if spec.method in _REPLICATED_METHODS else k
+        path, shards = cost_model.decide(spec, len(idxs), k_eff)
+        spec = dataclasses.replace(spec, exec_path=path, n_shards=shards)
+        out.setdefault(spec, []).extend(idxs)
+    return out
+
+
+def requeue_spec(spec: BucketSpec) -> BucketSpec:
+    """The spec a *fresh single-slice, meshless plan* would produce for
+    this bucket — what the health ladder requeues a failing slice under
+    (``health.heal_task``), so a healed site's spec (and its manifest /
+    journal entry) matches re-planning that site alone: unsharded, one
+    replicated dispatch, every other static decision unchanged.
+
+    >>> s = BucketSpec(m=8, n=8, method="rtn", bits=4, group_size=None,
+    ...                rank=2, split="paper", block_size=8, act_order=False,
+    ...                lambda_frac=0.01, magr=False, magr_iters=1,
+    ...                has_gram=False, n_shards=4, exec_path="sharded")
+    >>> requeue_spec(s).n_shards, requeue_spec(s).exec_path
+    (1, 'replicated')
+    """
+    return dataclasses.replace(spec, n_shards=1, exec_path="replicated")
+
+
 def plan_buckets(tasks: list[LayerTask], qspec=None, method: str | None = None,
                  base: QuantConfig | None = None, *, mesh=None,
-                 axis: str = "model",
-                 for_eval: bool = False) -> dict[BucketSpec, list[int]]:
+                 axis: str = "model", for_eval: bool = False,
+                 cost_model=None) -> dict[BucketSpec, list[int]]:
     """Group task indices by executable signature (insertion-ordered).
 
     Args:
@@ -531,6 +634,11 @@ def plan_buckets(tasks: list[LayerTask], qspec=None, method: str | None = None,
                 (:func:`evaluate_layer_batch`): route each task's Gram into
                 its bucket whenever present so every candidate's proxy
                 error is calibration-weighted (see :func:`make_spec`).
+        cost_model: optional :class:`repro.core.costmodel.CostModel`.
+                When given, each bucket's execution path (replicated /
+                sharded / sequential) is chosen from predicted time
+                instead of divisibility alone (:func:`apply_cost_model`);
+                ``None`` keeps the legacy divisibility-only behavior.
 
     Returns an insertion-ordered ``{BucketSpec: [task indices]}``."""
     buckets: dict[BucketSpec, list[int]] = {}
@@ -545,7 +653,7 @@ def plan_buckets(tasks: list[LayerTask], qspec=None, method: str | None = None,
         spec = make_spec(m, n, t_qspec, t_method, has_gram, base,
                          mesh=mesh, axis=axis, for_eval=for_eval)
         buckets.setdefault(spec, []).append(i)
-    return buckets
+    return apply_cost_model(buckets, cost_model, mesh=mesh, axis=axis)
 
 
 def plan_manifest(tasks: list[LayerTask],
@@ -592,7 +700,8 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
                          *, mesh=None, axis: str = "model",
                          stream: bool = True, policy=None, report=None,
                          journal=None,
-                         should_stop: Callable[[], bool] | None = None
+                         should_stop: Callable[[], bool] | None = None,
+                         cost_model=None, compile_cache=None
                          ) -> list[dict | None]:
     """Quantize all ``tasks`` bucket-by-bucket.
 
@@ -642,13 +751,31 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
                   boundary (after the journal commit); returning True
                   raises :class:`repro.core.health.QuantPreempted` — the
                   clean SIGTERM path of ``launch/train.py``.
+        cost_model: optional :class:`repro.core.costmodel.CostModel` (or
+                  anything its ``coerce`` accepts): bucket execution paths
+                  are chosen from predicted time instead of divisibility
+                  (see :func:`plan_buckets`).
+        compile_cache: optional
+                  :class:`repro.core.compile_cache.CompileCache` (or a
+                  directory path): replicated buckets run through
+                  persisted AOT executables keyed on the plan fingerprint
+                  — the second process start deserializes instead of
+                  retracing, with hits/misses surfaced in the progress
+                  line.
 
     Returns one leaf dict per task, in task order (same leaves as the
     sequential path); entries are ``None`` for slices the health ladder
     degraded to dense."""
     from repro.core import faults, health
+    from repro.core.compile_cache import CompileCache, canonical_digest
+    from repro.core.costmodel import CostModel
 
-    buckets = plan_buckets(tasks, qspec, method, base, mesh=mesh, axis=axis)
+    cost_model = CostModel.coerce(cost_model)
+    cache = CompileCache.coerce(compile_cache)
+    buckets = plan_buckets(tasks, qspec, method, base, mesh=mesh, axis=axis,
+                           cost_model=cost_model)
+    scope = (canonical_digest(plan_manifest(tasks, buckets, axis))
+             if cache is not None else None)
     results: list[dict | None] = [None] * len(tasks)
     items = list(buckets.items())
     guarded = policy is not None and policy.enabled
@@ -674,17 +801,28 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
     def dispatch(b: int, staged) -> tuple[list[int], dict]:
         spec, idxs = items[b]
         Ws, Hs, keys = staged
+        cache_note = ""
+        if spec.n_shards > 1:
+            out = run_bucket_sharded(Ws, Hs, keys, spec, mesh, axis)
+        elif spec.exec_path == "sequential":
+            out = run_bucket_sequential(Ws, Hs, keys, spec)
+        elif cache is not None:
+            args = (Ws, Hs, keys) if spec.has_gram else (Ws, keys)
+            out, hit = cache.call(
+                "bucket", {"scope": scope, "spec": dataclasses.asdict(spec),
+                           "L": len(idxs)}, bucket_fn(spec), args)
+            cache_note = (f" [cache {'hit' if hit else 'miss'} "
+                          f"({cache.hits}h/{cache.misses}m)]")
+        else:
+            out = run_bucket(Ws, Hs, keys, spec)
         if progress:
             g = "col" if spec.group_size is None else spec.group_size
             shard_note = (f" sharded x{spec.n_shards}"
-                          if spec.n_shards > 1 else " unsharded")
+                          if spec.n_shards > 1 else f" {spec.exec_path}"
+                          if spec.exec_path == "sequential" else " unsharded")
             progress(f"[bucket {b}] {spec.method}/{spec.bits}b/g{g}/"
                      f"r{spec.rank} {spec.m}x{spec.n} x{len(idxs)} "
-                     f"layers{shard_note}")
-        if spec.n_shards > 1:
-            out = run_bucket_sharded(Ws, Hs, keys, spec, mesh, axis)
-        else:
-            out = run_bucket(Ws, Hs, keys, spec)
+                     f"layers{shard_note}{cache_note}")
         return idxs, out
 
     staged = None

@@ -68,7 +68,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batched import (BucketSpec, eval_single, quantize_single_deq)
+from repro.core.batched import (BucketSpec, eval_single, quantize_single_deq,
+                                requeue_spec)
 from repro.core.optq import cholesky_factor_finite
 from repro.core.quantizer import (dequantize_int, dequantize_nf4,
                                   quantize_int, quantize_nf4, unpack_codes)
@@ -323,8 +324,11 @@ def heal_task(W, H, key, spec: BucketSpec, policy: HealthPolicy,
             f"weight at {HealthReport.site_key(path, expert)} contains "
             "non-finite values — unrecoverable (corrupt input params)")
     diag = diagnose(W, H, spec)
-    # heal single-slice, unsharded: the sequential-oracle requeue
-    spec = dataclasses.replace(spec, n_shards=1)
+    # heal single-slice, unsharded: requeue under the spec a fresh
+    # meshless plan of this one slice would produce (the sequential
+    # oracle) — batched.requeue_spec keeps n_shards/exec_path consistent
+    # with the planner so the healed site's manifest/journal entry matches
+    spec = requeue_spec(spec)
     steps: list[dict] = []
     gram_finite = bool(diag["gram"] and diag["gram"]["finite"])
 

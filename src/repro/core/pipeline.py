@@ -464,12 +464,15 @@ def _quantize_model_batched(eparams: dict, store: GramStore,
                             progress: Callable[[str], None] | None,
                             mesh=None, shard_axis: str = "model", *,
                             policy=None, report=None, journal=None,
-                            should_stop=None) -> None:
+                            should_stop=None, cost_model=None,
+                            compile_cache=None) -> None:
     tasks, groups = _gather_tasks(eparams, store, sites, seed)
     results = quantize_layer_batch(tasks, progress=progress,
                                    mesh=mesh, axis=shard_axis,
                                    policy=policy, report=report,
-                                   journal=journal, should_stop=should_stop)
+                                   journal=journal, should_stop=should_stop,
+                                   cost_model=cost_model,
+                                   compile_cache=compile_cache)
     guarded = policy is not None and policy.enabled
     for g in groups:
         qspec, method = g["site"].qspec, g["site"].method
@@ -587,7 +590,8 @@ def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
                    policy: "health.HealthPolicy | None" = None,
                    report: "health.HealthReport | None" = None,
                    journal_dir: str | None = None,
-                   should_stop: Callable[[], bool] | None = None):
+                   should_stop: Callable[[], bool] | None = None,
+                   cost_model=None, compile_cache=None):
     """Quantize all block linears of ``params``.
 
     ``recipe`` (the primary input — :class:`repro.core.recipe.QuantRecipe`)
@@ -628,6 +632,15 @@ def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
     :class:`repro.core.health.QuantPreempted` — the clean SIGTERM path of
     ``launch/train.py``.
 
+    ``cost_model`` (batched engine only) — a
+    :class:`repro.core.costmodel.CostModel` (or calibration/path its
+    ``coerce`` accepts): each bucket's execution path (replicated /
+    sharded / sequential) is chosen from calibrated predicted time instead
+    of the divisibility gate.  ``compile_cache`` (batched engine only) — a
+    :class:`repro.core.compile_cache.CompileCache` or directory path:
+    bucket executables persist to disk keyed on the plan fingerprint, so
+    repeat process starts deserialize instead of retracing.
+
     Returns (new_params in the input (scan/eager) layout, new_cfg with
     ``quant=`` set to the recipe's default qspec, gram_store).  Skipped
     sites keep their dense ``w`` leaf — as do sites the health ladder
@@ -645,6 +658,11 @@ def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
         raise ValueError("journaled (resumable) quantization requires the "
                          "batched engine's bucket streaming; use "
                          "engine='batched' or drop journal_dir=")
+    if (cost_model is not None or compile_cache is not None) \
+            and engine != "batched":
+        raise ValueError("cost_model=/compile_cache= drive the batched "
+                         "engine's bucket planner/executables; use "
+                         "engine='batched' or drop them")
     policy = health.HealthPolicy() if policy is None else policy
     report = health.HealthReport() if report is None else report
     journal = None
@@ -657,10 +675,12 @@ def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
     _check_scan_uniform(sites, cfg)
     store = run_calibration(eparams, cfg, calib_batches, report=report)
     new_params = jax.tree.map(lambda a: a, eparams)   # structural copy
+    extra = ({"cost_model": cost_model, "compile_cache": compile_cache}
+             if engine == "batched" else {})
     _ENGINES[engine](eparams, store, sites, seed, cfg, new_params,
                      progress, mesh, shard_axis, policy=policy,
                      report=report, journal=journal,
-                     should_stop=should_stop)
+                     should_stop=should_stop, **extra)
     if journal_dir is not None:
         report.save(os.path.join(journal_dir, "health.json"))
     new_cfg = dataclasses.replace(cfg, quant=recipe.qspec)
@@ -807,7 +827,7 @@ def _abstract_tasks(eshapes: dict,
 def quantization_manifest(cfg: ModelConfig, method: str | None = None,
                           qspec: QSpec | None = None, *,
                           recipe: QuantRecipe | None = None, mesh=None,
-                          shard_axis: str = "model",
+                          shard_axis: str = "model", cost_model=None,
                           _eshapes: dict | None = None) -> dict:
     """Bucket manifest of a ``quantize_model`` run, built from abstract
     shapes alone — no calibration, no weights, no device compute.
@@ -840,7 +860,9 @@ def quantization_manifest(cfg: ModelConfig, method: str | None = None,
     sites = recipe.resolve(quantizable_linear_paths(eshapes))
     _check_scan_uniform(sites, cfg)
     tasks = _abstract_tasks(eshapes, sites)
-    buckets = plan_buckets(tasks, mesh=mesh, axis=shard_axis)
+    from repro.core.costmodel import CostModel
+    buckets = plan_buckets(tasks, mesh=mesh, axis=shard_axis,
+                           cost_model=CostModel.coerce(cost_model))
     manifest = plan_manifest(tasks, buckets, axis=shard_axis)
     manifest["recipe"] = recipe.to_dict()
     manifest["site_lora"] = [

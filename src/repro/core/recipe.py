@@ -181,6 +181,24 @@ class QuantRecipe:
             return cls.from_dict(json.load(f))
 
 
+def plan_fingerprint(plan: dict) -> str:
+    """Canonical sha1 of a serialized plan — a recipe dict or a bucket
+    manifest (``quantization_manifest`` / ``plan_manifest`` output).  The
+    persisted compile cache scopes its executable keys by this hash
+    (:mod:`repro.core.compile_cache`): a changed recipe, bucket set, or
+    task assignment is a cache miss by construction, never a stale
+    executable.
+
+    >>> a = plan_fingerprint({"buckets": [], "axis": "model"})
+    >>> a == plan_fingerprint({"axis": "model", "buckets": []})
+    True
+    >>> len(a)
+    40
+    """
+    from repro.core.compile_cache import canonical_digest
+    return canonical_digest(plan)
+
+
 def load_plan(path: str) -> QuantRecipe:
     """Load a :class:`QuantRecipe` from either a recipe JSON or a bucket
     **manifest** JSON that embeds one (``quantization_manifest`` output /

@@ -32,6 +32,8 @@ import time
 import jax
 import numpy as np
 
+from repro.core.costmodel import normalize_cost_analysis
+
 
 # ---------------------------------------------------------------------------
 # HLO collective parsing.
@@ -286,10 +288,7 @@ def lower_cell(arch: str, cell: str, *, multi_pod: bool = False,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
-    if isinstance(cost, (list, tuple)):
-        # newer jax returns one properties dict per program executable
-        cost = cost[0] if cost else {}
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     hlo = compiled.as_text()
     colls = collective_summary(hlo)
 

@@ -49,7 +49,10 @@ def _build_quantized(args, cfg, params):
                           enc_len=16, n_prefix=cfg.n_prefix,
                           d_model=cfg.d_model)
         calib = [TokenStream(dcfg).next_batch()]
-        params, cfg, _ = quantize_model(params, cfg, calib, recipe=recipe)
+        params, cfg, _ = quantize_model(
+            params, cfg, calib, recipe=recipe,
+            cost_model=args.cost_cal or None,
+            compile_cache=args.compile_cache or None)
     return cfg, params
 
 
@@ -78,7 +81,8 @@ def _serve_multitenant(args, cfg, params) -> int:
 
     engine = ServeEngine(params, cfg, registry, page_size=args.page_size,
                          max_len=args.cache_len, bucket_capacity=args.batch,
-                         use_kernel=args.kernel)
+                         use_kernel=args.kernel,
+                         compile_cache=args.compile_cache or None)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     rids = [engine.submit([int(rng.integers(1, cfg.vocab))],
@@ -94,6 +98,8 @@ def _serve_multitenant(args, cfg, params) -> int:
           f"{toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s), "
           f"{len(tenants)} tenants, rank buckets {registry.ranks()}, "
           f"p50 latency {p50 * 1e3:.0f}ms")
+    if engine.compile_cache is not None:
+        print(f"[serve] decode {engine.compile_cache.summary()}")
     return 0
 
 
@@ -168,6 +174,14 @@ def main(argv=None) -> int:
     p.add_argument("--adapter", action="append", default=[],
                    metavar="NAME=DIR",
                    help="hot-load a tenant adapter checkpoint (repeatable)")
+    p.add_argument("--compile-cache", default="", metavar="DIR",
+                   help="persist AOT executables (quantization buckets + "
+                        "decode step) under DIR; a second start with the "
+                        "same DIR deserializes instead of retracing")
+    p.add_argument("--cost-cal", default="", metavar="FILE",
+                   help="cost-model calibration JSON (repro.core.costmodel "
+                        "calibrate output) driving the bucket planner's "
+                        "sharded/replicated/sequential choice")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

@@ -200,7 +200,7 @@ def quant_task_specs(method: str, axis: str | None = "model",
 
 
 def quant_site_specs(sites: dict, shapes_tree=None, mesh=None,
-                     axis: str = "model") -> dict:
+                     axis: str = "model", cost_model=None) -> dict:
     """Engine-layout PartitionSpecs for every resolved site of a
     :class:`repro.core.recipe.QuantRecipe`:
     ``{lin_path: {leaf: PartitionSpec}}`` keyed by the eager param path,
@@ -211,12 +211,37 @@ def quant_site_specs(sites: dict, shapes_tree=None, mesh=None,
     or ShapeDtypeStruct pytree holding each site's ``w``), the per-site
     shard decision reuses the planner's exact gate
     (``repro.core.batched.bucket_shards`` on the site's column count and
-    method); without them, the replicated layout is returned.  Deployment
-    code uses this to keep a mixed-precision engine output resident
-    without importing engine internals."""
-    from repro.core.batched import bucket_shards, task_leaf_specs
+    method); without them, the replicated layout is returned.  With a
+    ``cost_model`` (:class:`repro.core.costmodel.CostModel` or a
+    calibration path), sites are grouped into the planner's buckets and
+    the predicted-time decision replaces the divisibility gate — the same
+    choice ``plan_buckets(cost_model=...)`` makes, so resident layouts
+    match engine outputs.  Deployment code uses this to keep a mixed-
+    precision engine output resident without importing engine
+    internals."""
+    from repro.core.batched import (bucket_axis_size, bucket_shards,
+                                    task_leaf_specs)
     from repro.utils import get_path
     out = {}
+    if cost_model is not None and mesh is not None and shapes_tree is not None:
+        from repro.core.costmodel import CostModel
+        cm = CostModel.coerce(cost_model)
+        groups: dict = {}          # planner bucket key -> member paths
+        for path, site in sites.items():
+            if site.skip:
+                continue
+            w = get_path(shapes_tree, path)["w"]
+            key = (site.method, int(w.shape[-2]), int(w.shape[-1]),
+                   site.qspec.rank)
+            groups.setdefault(key, []).append(path)
+        k = bucket_axis_size(mesh, axis)
+        for (method, m, n, rank), paths in groups.items():
+            _, shards = cm.decide_geometry(method, m=m, n=n,
+                                           L=len(paths), k=k, rank=rank)
+            ax = axis if shards > 1 else None
+            for p in paths:
+                out[p] = task_leaf_specs(method, ax)
+        return out
     for path, site in sites.items():
         if site.skip:
             continue

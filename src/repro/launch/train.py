@@ -83,6 +83,16 @@ def parse_args(argv=None):
                         "quantization for preemptible jobs; the health "
                         "report lands at DIR/health.json")
     p.add_argument("--straggler-factor", type=float, default=3.0)
+    p.add_argument("--compile-cache", default="", metavar="DIR",
+                   help="persist AOT bucket executables under DIR; a "
+                        "restart with the same DIR deserializes instead of "
+                        "retracing (pairs well with --resume-quant)")
+    p.add_argument("--cost-cal", default="", metavar="FILE|auto",
+                   help="cost-model calibration driving the bucket "
+                        "planner's sharded/replicated/sequential choice: a "
+                        "calibration JSON, or 'auto' to microbenchmark this "
+                        "host once and cache the result "
+                        "(repro.core.costmodel.calibrate)")
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args(argv)
 
@@ -164,6 +174,12 @@ def main(argv=None) -> int:
         from repro.core.health import HealthReport, QuantPreempted
         if calib is None:
             calib = [stream.next_batch() for _ in range(args.calib_batches)]
+        cost_model = None
+        if args.cost_cal:
+            from repro.core.costmodel import CostModel, calibrate
+            cal = (calibrate() if args.cost_cal == "auto"
+                   else args.cost_cal)
+            cost_model = CostModel.coerce(cal)
         t0 = time.time()
         journal_dir = args.resume_quant or None
         report = HealthReport()
@@ -171,6 +187,8 @@ def main(argv=None) -> int:
             params, cfg, _ = quantize_model(
                 params, cfg, calib, recipe=recipe, report=report,
                 journal_dir=journal_dir,
+                cost_model=cost_model,
+                compile_cache=args.compile_cache or None,
                 should_stop=(lambda: stop["flag"]) if journal_dir else None)
         except QuantPreempted as e:
             print(f"[preempt-quant] signal received — buckets 0..{e.bucket} "
@@ -184,7 +202,8 @@ def main(argv=None) -> int:
         # production checkpoints carry the bucket manifest (recipe
         # included) so restores on any mesh can rebuild per-leaf shardings
         # without the planner (checkpoint.manager.manifest_shardings)
-        manifest = quantization_manifest(cfg, recipe=recipe)
+        manifest = quantization_manifest(cfg, recipe=recipe,
+                                         cost_model=cost_model)
         trainable = "lora"
     else:
         trainable = "all"

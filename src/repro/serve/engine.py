@@ -67,12 +67,11 @@ class _Request:
                 else self.out[-1])
 
 
-@functools.lru_cache(maxsize=32)
-def _decode_exec(cfg, sites: tuple):
-    """One jitted serving step per (model config, site set) — cached at
-    module level so every engine instance (and every benchmark rep)
-    shares the same executable; jit's own cache then specializes it per
-    rank-bucket shape signature."""
+def _decode_step_fn(cfg, sites: tuple):
+    """The raw (untraced) serving step for one (model config, site set) —
+    jitted by :func:`_decode_exec` for the in-process path, or wrapped in a
+    :class:`~repro.core.compile_cache.PersistedFunction` when the engine is
+    given a compile cache (cold-start skips the retrace)."""
 
     def step_fn(base, stacks, ad_slots, k_pool, v_pool, page_tables,
                 lengths, tokens):
@@ -99,7 +98,16 @@ def _decode_exec(cfg, sites: tuple):
         nxt = jnp.argmax(logits[:, :cfg.vocab], axis=-1)
         return nxt.astype(jnp.int32), k_pool, v_pool
 
-    return jax.jit(step_fn)
+    return step_fn
+
+
+@functools.lru_cache(maxsize=32)
+def _decode_exec(cfg, sites: tuple):
+    """One jitted serving step per (model config, site set) — cached at
+    module level so every engine instance (and every benchmark rep)
+    shares the same executable; jit's own cache then specializes it per
+    rank-bucket shape signature."""
+    return jax.jit(_decode_step_fn(cfg, sites))
 
 
 def _copy_to(node: dict, keys: list[str]) -> dict:
@@ -125,7 +133,7 @@ class ServeEngine:
     def __init__(self, params: dict, cfg, registry: AdapterRegistry, *,
                  page_size: int = 8, n_pages: int | None = None,
                  max_len: int = 64, bucket_capacity: int = 4,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, compile_cache=None):
         if cfg.family not in ("dense", "moe"):
             raise ValueError(
                 f"ServeEngine serves attention-cache families (dense/moe); "
@@ -153,7 +161,19 @@ class ServeEngine:
         self._reqs: dict[int, _Request] = {}
         self._next_rid = 0
         self.steps = 0
-        self._exec = _decode_exec(self.cfg, tuple(self.registry.sites()))
+        sites = tuple(self.registry.sites())
+        from repro.core.compile_cache import CompileCache, PersistedFunction
+        self.compile_cache = CompileCache.coerce(compile_cache)
+        if self.compile_cache is not None:
+            # persisted AOT path: each rank-bucket shape signature resolves
+            # through the disk cache, so a second process start deserializes
+            # instead of retracing the decode step
+            self._exec = PersistedFunction(
+                self.compile_cache, "decode",
+                {"cfg": repr(self.cfg), "sites": list(sites)},
+                _decode_step_fn(self.cfg, sites))
+        else:
+            self._exec = _decode_exec(self.cfg, sites)
 
     # -- request lifecycle -------------------------------------------------
 

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Benchmark-floor checker: the perf numbers in ``results/*.json`` must not
+regress below their gated floors.
+
+Pinned-row tests (``tests/test_perf_levers.py``) guard the *schema* of the
+result files; this tool guards the *values*, so a refactor that silently
+loses a speedup fails verification even when every test stays green:
+
+* ``table10_init_cost.json -> loftq_sharded_row.speedup >= 1.0`` — the
+  cost-model planner must keep choosing the faster execution path for its
+  historical misprediction (chosen-vs-worst ratio, so < 1.0 means the
+  planner picked the slower path again);
+* ``table10_init_cost.json -> cold_start_row.speedup > 1.0`` — a warm
+  persisted compile cache must keep beating a cold process start;
+* ``serve_bench.json -> speedup >= 3.0`` — the continuous-batching serving
+  engine must stay well ahead of the static-slot baseline.
+
+Wired into the verify skill (`.claude/skills/verify/SKILL.md`):
+
+    python tools/check_bench.py
+
+Exits 0 when every present file satisfies its floors; a MISSING result
+file is reported but non-fatal (benchmarks are regenerated on demand, not
+checked into every environment), a present-but-regressed value fails.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+RESULTS = REPO / "results"
+
+# (file, dotted key path, floor, strict) — strict=True means "> floor",
+# else ">= floor"
+FLOORS = [
+    ("table10_init_cost.json", "loftq_sharded_row.speedup", 1.0, False),
+    ("table10_init_cost.json", "cold_start_row.speedup", 1.0, True),
+    ("serve_bench.json", "speedup", 3.0, False),
+]
+
+
+def _lookup(obj, dotted: str):
+    for part in dotted.split("."):
+        obj = obj[part]
+    return obj
+
+
+def main() -> int:
+    errors, missing, checked = [], [], 0
+    for fname, key, floor, strict in FLOORS:
+        path = RESULTS / fname
+        if not path.exists():
+            missing.append(f"{fname} (skipped: not generated)")
+            continue
+        try:
+            value = float(_lookup(json.loads(path.read_text()), key))
+        except (KeyError, TypeError, ValueError) as e:
+            errors.append(f"{fname}: cannot read {key!r} ({e!r})")
+            continue
+        ok = value > floor if strict else value >= floor
+        op = ">" if strict else ">="
+        if not ok:
+            errors.append(f"{fname}: {key} = {value} violates floor "
+                          f"{op} {floor}")
+        else:
+            print(f"  ok: {fname} {key} = {value} ({op} {floor})")
+            checked += 1
+    for m in missing:
+        print(f"  {m}")
+    if errors:
+        print("\n".join(errors))
+        print(f"FAILED: {len(errors)} benchmark floor violation(s)")
+        return 1
+    print(f"bench floors OK: {checked} checked, {len(missing)} skipped")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,7 @@ sys.path.insert(0, str(REPO / "src"))
 DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
 DOCTEST_MODULES = ["repro.core.batched", "repro.core.allocate",
                    "repro.core.health", "repro.core.faults",
+                   "repro.core.costmodel", "repro.core.compile_cache",
                    "repro.serve", "repro.serve.kv_cache",
                    "repro.serve.scheduler"]
 
