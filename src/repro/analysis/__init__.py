@@ -1,0 +1,60 @@
+"""reprolint — JAX-aware static analysis for the CLoQ engine.
+
+Two halves, both zero-FLOP (nothing compiles, nothing runs on device):
+
+* an **AST rule engine** (:mod:`repro.analysis.engine`) with rules for
+  the structural hazards this codebase has actually been bitten by —
+  RETRACE (jit-in-loop, unhashable static args, trace-time branching),
+  COLLECTIVE (unbound literal mesh axes, collectives on replicated
+  paths), DTYPE (accidental float64 promotion via numpy-in-jnp mixing),
+  PRNG (key reuse without ``split``), PURITY (``print``/``.item()``/
+  ``np.asarray`` inside traced bodies);
+* a **shape-contract fleet** (:mod:`repro.analysis.shapes`) pinning the
+  planner/recipe/layout stack against committed golden manifests via
+  ``jax.eval_shape``.
+
+Suppression: ``# reprolint: disable=RULE`` pragmas on the finding line,
+``# reprolint: disable-file=RULE`` file-wide, and a committed baseline
+file (``tools/reprolint_baseline.json``) that keeps pre-existing
+findings from gating.  ``tools/check_static.py`` is the CLI and the
+verify-skill entry point.
+
+>>> findings = lint_source('''
+... import jax, jax.numpy as jnp
+... @jax.jit
+... def f(x):
+...     print(x)          # fires at trace time only
+...     return x * 2
+... ''')
+>>> [(f.rule, f.line) for f in findings]
+[('PURITY', 5)]
+>>> lint_source('''
+... import jax
+... @jax.jit
+... def f(x):
+...     return x * 2      # clean: no host effects, no branching
+... ''')
+[]
+
+Pragmas silence a finding in place:
+
+>>> lint_source('''
+... import jax
+... @jax.jit
+... def f(x):
+...     print("tracing f")  # reprolint: disable=PURITY
+...     return x
+... ''')
+[]
+"""
+from repro.analysis.engine import (Finding, RULE_IDS, TIER_ERROR,
+                                   TIER_REPORT, apply_baseline, gating,
+                                   lint_file, lint_paths, lint_source,
+                                   load_baseline, save_baseline,
+                                   summarize)
+
+__all__ = [
+    "Finding", "RULE_IDS", "TIER_ERROR", "TIER_REPORT",
+    "apply_baseline", "gating", "lint_file", "lint_paths",
+    "lint_source", "load_baseline", "save_baseline", "summarize",
+]

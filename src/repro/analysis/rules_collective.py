@@ -1,0 +1,127 @@
+"""COLLECTIVE rule: mesh-axis contracts of psum/pmax/all_gather & friends.
+
+Two structural invariants the sharded engine depends on:
+
+* **bound axes** — a collective over a *literal* axis name (``jax.lax.
+  psum(x, "model")``) only works when an enclosing ``shard_map``/``pmap``
+  binds that name.  The repo's idiom threads axis names as function
+  parameters (``axis``, guarded by ``if axis is not None``) so the
+  binding is the caller's job; a hard-coded literal outside any binding
+  context is exactly the `loftq_sharded_row`-class bug that compiles on a
+  mesh and dies replicated.  Literals inside a shard_map operand are
+  accepted (we do not cross-check the mesh's axis names — the runtime
+  does that legibly).
+* **replicated paths stay collective-free** — code guarded by
+  ``exec_path == "replicated"`` (the planner's single-device fallback)
+  must not reach a collective: there is no mesh to serve it.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astlib
+from repro.analysis.engine import Finding
+
+# collective -> index of its axis-name positional arg
+COLLECTIVES = {"psum": 1, "pmax": 1, "pmin": 1, "pmean": 1,
+               "psum_scatter": 1, "all_gather": 1, "all_to_all": 1,
+               "ppermute": 1, "pshuffle": 1, "axis_index": 0,
+               "axis_size": 0}
+_AXIS_KWARGS = ("axis_name", "axis_names", "axis")
+
+
+def _collective_name(call: ast.Call) -> str | None:
+    name = astlib.dotted_name(call.func)
+    if not name:
+        return None
+    leaf = name.split(".")[-1]
+    if leaf not in COLLECTIVES:
+        return None
+    # accept jax.lax.psum / lax.psum / bare psum-from-import
+    if name in (leaf, f"lax.{leaf}", f"jax.lax.{leaf}"):
+        return leaf
+    return None
+
+
+def _axis_arg(call: ast.Call, leaf: str) -> ast.AST | None:
+    idx = COLLECTIVES[leaf]
+    if len(call.args) > idx:
+        return call.args[idx]
+    for kw in call.keywords:
+        if kw.arg in _AXIS_KWARGS:
+            return kw.value
+    return None
+
+
+def _literal_axes(node: ast.AST | None) -> list[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                out.append(el.value)
+        return out
+    return []
+
+
+def _replicated_branch(node: ast.AST) -> bool:
+    """True when an ancestor If compares against the literal "replicated"
+    and ``node`` sits in the branch where the comparison holds."""
+    prev = node
+    for anc in astlib.ancestors(node):
+        if isinstance(anc, ast.If):
+            eq = _compares_replicated(anc.test, ast.Eq)
+            ne = _compares_replicated(anc.test, ast.NotEq)
+            in_body = any(prev is n or _contains(n, prev)
+                          for n in anc.body)
+            if (eq and in_body) or (ne and not in_body):
+                return True
+        prev = anc
+    return False
+
+
+def _contains(tree: ast.AST, node: ast.AST) -> bool:
+    return any(sub is node for sub in ast.walk(tree))
+
+
+def _compares_replicated(test: ast.AST, op_type) -> bool:
+    for sub in ast.walk(test):
+        if isinstance(sub, ast.Compare) and \
+                any(isinstance(op, op_type) for op in sub.ops):
+            operands = [sub.left, *sub.comparators]
+            if any(isinstance(o, ast.Constant) and o.value == "replicated"
+                   for o in operands):
+                return True
+    return False
+
+
+def check_collective(tree: ast.Module, source: str,
+                     path: str) -> list[Finding]:
+    findings: list[Finding] = []
+    bound = astlib.shardmap_functions(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        leaf = _collective_name(node)
+        if leaf is None:
+            continue
+        ctx = astlib.context_name(node)
+        axes = _literal_axes(_axis_arg(node, leaf))
+        if axes and not astlib.in_marked_context(node, bound):
+            findings.append(Finding(
+                "COLLECTIVE", path, node.lineno,
+                f"{leaf} over literal axis {axes[0]!r} with no enclosing "
+                "shard_map/pmap binding it",
+                hint="thread the axis name from the caller (axis=None "
+                     "fallback) or wrap the body in shard_map",
+                context=ctx))
+        if _replicated_branch(node):
+            findings.append(Finding(
+                "COLLECTIVE", path, node.lineno,
+                f"{leaf} reachable on the exec_path == \"replicated\" "
+                "branch — no mesh axis exists there",
+                hint="replicated fallbacks must be collective-free; "
+                     "gate the collective on the sharded path",
+                context=ctx))
+    return findings

@@ -1,0 +1,218 @@
+"""DTYPE and PRNG rules: numeric-contract hazards.
+
+DTYPE — accidental float64 promotion.  jax defaults to f32 (no
+``jax_enable_x64`` here), numpy defaults to f64: mixing ``np.`` math into
+``jnp`` expressions silently computes on host at double precision and
+casts back, which both hides a device-host sync and makes "the same"
+arithmetic differ between engines.  Outside the allowlisted host-side
+modules (:data:`HOST_SIDE`, e.g. ``health.py``'s deliberately-f64 guard
+accounting) we flag ``np.float64``/``np.double`` dtype requests and
+``np.<fn>(...)`` calls whose operand is a ``jnp`` expression.
+
+PRNG — key reuse.  jax keys are consumed by value: passing the *same*
+key to two samplers yields correlated (identical-stream) draws, the
+quietest of all initialization bugs.  Within one function body, a key
+variable passed to two ``jax.random.<sampler>`` calls with no
+``split``/reassignment between them is flagged (uses on mutually
+exclusive branches of one ``if`` are not).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astlib
+from repro.analysis.engine import Finding
+
+# host-side modules where float64 numpy math is the point (guard
+# accounting, cost calibration, checkpoint CRCs, data synthesis).  Paths
+# are matched by suffix against the linted file's relative path.
+HOST_SIDE = (
+    "core/health.py",
+    "core/costmodel.py",
+    "core/compile_cache.py",
+    "core/faults.py",
+    "checkpoint/manager.py",
+    "data/pipeline.py",
+)
+
+_F64_ATTRS = {"float64", "double", "longdouble", "float128"}
+# jax.random callables that CONSUME a key (not in: split/fold_in/PRNGKey —
+# those derive fresh keys, which is the fix, not the bug)
+_KEY_DERIVERS = {"split", "fold_in", "PRNGKey", "key", "wrap_key_data",
+                 "key_data", "clone"}
+
+
+def _np_aliases(tree: ast.Module) -> set[str]:
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy":
+                    out.add(a.asname or "numpy")
+    return out
+
+
+def _jnp_aliases(tree: ast.Module) -> set[str]:
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax.numpy":
+                    out.add(a.asname or "jax")
+    return out
+
+
+def is_host_side(path: str) -> bool:
+    norm = path.replace("\\", "/")
+    return any(norm.endswith(sfx) for sfx in HOST_SIDE)
+
+
+def check_dtype(tree: ast.Module, source: str, path: str) -> list[Finding]:
+    if is_host_side(path):
+        return []
+    findings: list[Finding] = []
+    # fixture snippets and REPL fragments often omit the imports: fall
+    # back to the conventional aliases
+    nps = _np_aliases(tree) or {"np"}
+    jnps = _jnp_aliases(tree) or {"jnp"}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and \
+                node.value.id in nps and node.attr in _F64_ATTRS:
+            findings.append(Finding(
+                "DTYPE", path, node.lineno,
+                f"np.{node.attr} in device-adjacent code — jax computes "
+                "f32 by default; this promotes host math to f64",
+                hint="use jnp.float32 (or move the math to an "
+                     "allowlisted host-side module)",
+                context=astlib.context_name(node)))
+        elif isinstance(node, ast.Call):
+            name = astlib.dotted_name(node.func) or ""
+            parts = name.split(".")
+            if len(parts) == 2 and parts[0] in nps and jnps and any(
+                    astlib.subtree_mentions(a, jnps) for a in node.args):
+                findings.append(Finding(
+                    "DTYPE", path, node.lineno,
+                    f"{name}() applied to a jnp expression — numpy "
+                    "pulls the value to host and computes in float64",
+                    hint=f"use jnp.{parts[1]} to stay on device at f32",
+                    context=astlib.context_name(node)))
+    return findings
+
+
+# --- PRNG ------------------------------------------------------------------
+
+
+def _branch_path(node: ast.AST, stop: ast.AST) -> list[tuple[int, str]]:
+    """(id(if-node), side) pairs between ``node`` and ``stop`` — two uses
+    conflict only when their branch paths are compatible (no shared If
+    with opposite sides)."""
+    out = []
+    prev = node
+    for anc in astlib.ancestors(node):
+        if anc is stop:
+            break
+        if isinstance(anc, ast.If):
+            side = "body" if any(_contains(n, prev) or n is prev
+                                 for n in anc.body) else "orelse"
+            out.append((id(anc), side))
+        prev = anc
+    return out
+
+
+def _contains(tree: ast.AST, node: ast.AST) -> bool:
+    return any(sub is node for sub in ast.walk(tree))
+
+
+def _compatible(p1, p2) -> bool:
+    sides1 = dict(p1)
+    return all(sides1.get(i, s) == s for i, s in p2)
+
+
+def _scopes(tree: ast.Module):
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            yield node
+
+
+def _scope_nodes(scope):
+    """Walk a scope's body without descending into nested scopes."""
+    stack = ([scope.body] if isinstance(scope, ast.Lambda)
+             else list(scope.body))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue                       # a nested scope of its own
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _assigned_names(node: ast.AST) -> list[str]:
+    out = []
+    targets: list[ast.AST] = []
+    if isinstance(node, ast.Assign):
+        targets = list(node.targets)
+    elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+        targets = [node.target]
+    elif isinstance(node, (ast.For, ast.AsyncFor)):
+        targets = [node.target]
+    elif isinstance(node, ast.NamedExpr):
+        targets = [node.target]
+    for t in targets:
+        for sub in ast.walk(t):
+            if isinstance(sub, ast.Name):
+                out.append(sub.id)
+    return out
+
+
+def check_prng(tree: ast.Module, source: str, path: str) -> list[Finding]:
+    findings: list[Finding] = []
+    for scope in _scopes(tree):
+        events: list[tuple[int, int, str, str, ast.AST]] = []
+        for node in _scope_nodes(scope):
+            for name in _assigned_names(node):
+                events.append((node.lineno, node.col_offset, "assign",
+                               name, node))
+            if isinstance(node, (ast.Return, ast.Raise)):
+                # control leaves the scope: straight-line code after this
+                # point is only reachable on paths that skipped it, so
+                # earlier consumptions are not live anymore (keeps
+                # early-return method dispatch from false-positive reuse)
+                events.append((node.lineno, node.col_offset, "exit",
+                               "", node))
+            if isinstance(node, ast.Call):
+                target = astlib.dotted_name(node.func) or ""
+                parts = target.split(".")
+                if len(parts) >= 2 and parts[-2] == "random" and \
+                        parts[-1] not in _KEY_DERIVERS and \
+                        node.args and isinstance(node.args[0], ast.Name):
+                    events.append((node.lineno, node.col_offset, "use",
+                                   node.args[0].id, node))
+        events.sort(key=lambda e: (e[0], e[1]))
+        live_use: dict[str, tuple[ast.AST, int]] = {}
+        for lineno, _, kind, name, node in events:
+            if kind == "exit":
+                live_use.clear()
+                continue
+            if kind == "assign":
+                live_use.pop(name, None)
+                continue
+            if name in live_use:
+                prev_node, prev_line = live_use[name]
+                if _compatible(_branch_path(prev_node, scope),
+                               _branch_path(node, scope)):
+                    findings.append(Finding(
+                        "PRNG", path, lineno,
+                        f"PRNG key {name!r} reused — already consumed at "
+                        f"line {prev_line} with no split between",
+                        hint="key, sub = jax.random.split(key) before "
+                             "each consumer",
+                        context=astlib.function_name(scope)
+                        if not isinstance(scope, ast.Module)
+                        else "<module>"))
+                    continue
+            live_use[name] = (node, lineno)
+    return findings

@@ -1,0 +1,229 @@
+"""RETRACE and PURITY rules: hazards of the jax tracing model.
+
+RETRACE — programs that silently recompile (or fail to cache) under jit:
+
+* ``jit-in-loop``: ``jax.jit`` constructed inside a ``for``/``while``
+  body.  Every iteration builds a fresh wrapper with an empty compile
+  cache — the classic accidental-retrace.  Hoist the jit (or cache the
+  wrapper with ``functools.lru_cache``) outside the loop.
+* ``unhashable-static``: a call site of a jitted callable passes a
+  list/dict/set display or a ``jnp.``/``np.`` array expression in a
+  position declared ``static_argnums``/``static_argnames``.  Static
+  operands are dict keys of the compile cache: unhashable values raise,
+  array values retrace per call.
+* ``traced-branch``: ``if``/``while`` on a *parameter* of a traced
+  function.  Python control flow runs at trace time — branching on a
+  traced value raises ``TracerBoolConversionError`` at best and bakes in
+  one branch at worst.  Shape/dtype/None/isinstance tests are exempt
+  (static under trace), as are parameters declared static.
+
+PURITY — host-side effects inside traced bodies: ``print`` (fires at
+trace time, not run time — use ``jax.debug.print``), ``.item()`` /
+``np.asarray`` / ``np.array`` (forces a blocking device sync and fails
+under jit), and ``bool()``/``float()``/``int()`` on traced values.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astlib
+from repro.analysis.engine import Finding
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding",
+                 "weak_type"}
+_STATIC_CALLS = {"isinstance", "len", "hasattr", "getattr", "callable",
+                 "type", "issubclass"}
+_UNHASHABLE_NODES = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp, ast.GeneratorExp)
+
+
+def _loop_before_function(node: ast.AST) -> ast.AST | None:
+    """Nearest For/While ancestor reached before any function boundary."""
+    for anc in astlib.ancestors(node):
+        if isinstance(anc, (ast.For, ast.AsyncFor, ast.While)):
+            return anc
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            return None
+    return None
+
+
+def _is_arrayish(node: ast.AST) -> bool:
+    """Expression that hashes badly as a static arg: container displays
+    and ``jnp.``/``np.`` array constructors."""
+    if isinstance(node, _UNHASHABLE_NODES):
+        return True
+    if isinstance(node, ast.Call):
+        name = astlib.call_target(node) or ""
+        return name.split(".")[0] in ("jnp", "np", "numpy") or \
+            name.startswith("jax.numpy")
+    return False
+
+
+def _static_param_names(fn, tree) -> set[str]:
+    """Params of ``fn`` declared static at its jit site (by name, or by
+    argnum translated through the signature)."""
+    bindings = astlib.jitted_bindings(tree)
+    name = astlib.function_name(fn)
+    spec = bindings.get(name)
+    if spec is None:
+        return set()
+    params = astlib.param_names(fn)
+    static = set(spec.static_argnames)
+    for i in spec.static_argnums:
+        if 0 <= i < len(params):
+            static.add(params[i])
+    return static
+
+
+def _name_is_static_use(name_node: ast.Name) -> bool:
+    """A Name whose use in the test is static under trace: attribute
+    access of shape/dtype/..., ``is (not) None``, or isinstance/len."""
+    parent = getattr(name_node, "parent", None)
+    if isinstance(parent, ast.Attribute) and parent.attr in _STATIC_ATTRS:
+        return True
+    if isinstance(parent, ast.Call):
+        target = astlib.call_target(parent)
+        if target in _STATIC_CALLS:
+            return True
+    for anc in astlib.ancestors(name_node):
+        if isinstance(anc, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in anc.ops):
+            return True
+        if isinstance(anc, (ast.FunctionDef, ast.Lambda)):
+            break
+    return False
+
+
+def check_retrace(tree: ast.Module, source: str,
+                  path: str) -> list[Finding]:
+    findings: list[Finding] = []
+
+    # (1) jit constructed inside a loop body
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and \
+                astlib.call_target(node) in astlib.JIT_WRAPPERS:
+            if _loop_before_function(node) is not None:
+                findings.append(Finding(
+                    "RETRACE", path, node.lineno,
+                    "jax.jit constructed inside a loop — a fresh wrapper "
+                    "(and empty compile cache) every iteration",
+                    hint="hoist the jit out of the loop or cache the "
+                         "wrapper (functools.lru_cache / module level)",
+                    context=astlib.context_name(node)))
+
+    # (2) unhashable/array operands in declared-static positions
+    bindings = astlib.jitted_bindings(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = astlib.dotted_name(node.func)
+        spec = bindings.get(name or "")
+        if spec is None or name in astlib.JIT_WRAPPERS:
+            continue
+        bad: list[str] = []
+        for i in spec.static_argnums:
+            if i < len(node.args) and _is_arrayish(node.args[i]):
+                bad.append(f"positional arg {i}")
+        for kw in node.keywords:
+            if kw.arg in spec.static_argnames and _is_arrayish(kw.value):
+                bad.append(f"keyword {kw.arg!r}")
+        for desc in bad:
+            findings.append(Finding(
+                "RETRACE", path, node.lineno,
+                f"unhashable/array value passed as static arg "
+                f"({desc}) of jitted {name!r}",
+                hint="static args key the compile cache: pass hashable "
+                     "scalars/tuples, or drop the arg from static_*",
+                context=astlib.context_name(node)))
+
+    # (3) Python branching on traced parameters
+    traced = astlib.traced_functions(tree)
+    for fn in traced:
+        if isinstance(fn, ast.Lambda):
+            continue                       # lambdas cannot contain if-stmts
+        params = set(astlib.param_names(fn)) - _static_param_names(fn, tree)
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            if astlib.enclosing_function(node) is not fn:
+                continue                   # nested defs checked as themselves
+            for sub in ast.walk(node.test):
+                if isinstance(sub, ast.Name) and sub.id in params and \
+                        isinstance(sub.ctx, ast.Load) and \
+                        not _name_is_static_use(sub):
+                    findings.append(Finding(
+                        "RETRACE", path, node.lineno,
+                        f"Python `{type(node).__name__.lower()}` on traced "
+                        f"parameter {sub.id!r} of {fn.name!r}",
+                        hint="trace-time branching: use jnp.where/"
+                             "lax.cond, or declare the arg static",
+                        context=fn.name))
+                    break
+    return findings
+
+
+_NP_SYNC = {"asarray", "array", "copy"}
+
+
+def check_purity(tree: ast.Module, source: str,
+                 path: str) -> list[Finding]:
+    findings: list[Finding] = []
+    traced = astlib.traced_functions(tree)
+    if not traced:
+        return findings
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if not astlib.in_marked_context(node, traced):
+            continue
+        ctx = astlib.context_name(node)
+        name = astlib.call_target(node)
+        if name == "print":
+            findings.append(Finding(
+                "PURITY", path, node.lineno,
+                "print() inside a traced body fires at trace time only",
+                hint="use jax.debug.print for runtime values",
+                context=ctx))
+        elif name and name.split(".")[0] in ("np", "numpy") and \
+                len(name.split(".")) == 2 and \
+                name.split(".")[1] in _NP_SYNC and \
+                node.args and not all(isinstance(a, ast.Constant)
+                                      for a in node.args):
+            findings.append(Finding(
+                "PURITY", path, node.lineno,
+                f"{name}() on a traced value forces a host sync and "
+                "fails under jit",
+                hint="stay in jnp inside traced code; convert outside "
+                     "the jit boundary",
+                context=ctx))
+        elif isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "item" and not node.args:
+            findings.append(Finding(
+                "PURITY", path, node.lineno,
+                ".item() inside a traced body blocks on device sync "
+                "and fails under jit",
+                hint="return the array and .item() outside the jit",
+                context=ctx))
+        elif name in ("bool", "float", "int") and node.args and \
+                not isinstance(node.args[0], ast.Constant) and \
+                not _static_subexpr(node.args[0]):
+            findings.append(Finding(
+                "PURITY", path, node.lineno,
+                f"{name}() concretizes a traced value "
+                "(TracerBoolConversionError under jit)",
+                hint="keep it as an array, or compute it outside the "
+                     "traced body",
+                context=ctx))
+    return findings
+
+
+def _static_subexpr(node: ast.AST) -> bool:
+    """Arg expressions static under trace: shape/dtype reads, len()."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+            return True
+        if isinstance(sub, ast.Call) and \
+                astlib.call_target(sub) in _STATIC_CALLS:
+            return True
+    return False

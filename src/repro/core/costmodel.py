@@ -181,7 +181,7 @@ def calibrate(mesh=None, *, path: str | None = None,
         if cal is not None:
             return cal
 
-    key = jax.random.PRNGKey(0)
+    key, wkey = jax.random.split(jax.random.PRNGKey(0))
     # matmul throughput
     a = jax.random.normal(key, (1024, 1024), jnp.float32)
     mm = jax.jit(lambda x: x @ x)
@@ -227,7 +227,7 @@ def calibrate(mesh=None, *, path: str | None = None,
 
         # aggregate speedup of column-sharding a matmul over this mesh:
         # ~k when the shards are real chips, ~1 when they share one host
-        w = jax.random.normal(key, (1024, 2048), jnp.float32)
+        w = jax.random.normal(wkey, (1024, 2048), jnp.float32)
         sh = jax.jit(shard_map(lambda v: v @ v.T @ v, mesh=mesh,
                                in_specs=P(None, axis),
                                out_specs=P(None, axis)))

@@ -128,7 +128,7 @@ def _serve_legacy(args, cfg, params) -> int:
                 current[s, 0] = first
                 req_id += 1
         logits, cache = step(params, cache, jnp.asarray(current))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        nxt = jax.device_get(jnp.argmax(logits, axis=-1))
         steps += 1
         for s in range(B):
             if slots[s] is None:

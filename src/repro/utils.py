@@ -59,7 +59,7 @@ class GramStore:
         if keep_leading:
             x3 = jnp.asarray(x, jnp.float32)
             x3 = x3.reshape(x3.shape[0], -1, x3.shape[-1])
-            h = np.asarray(jnp.einsum("ecd,ecf->edf", x3, x3))
+            h = jax.device_get(jnp.einsum("ecd,ecf->edf", x3, x3))
             cnt = x3.shape[1]
         else:
             x2 = jnp.asarray(x, jnp.float32).reshape(-1, x.shape[-1])

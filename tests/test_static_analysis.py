@@ -1,0 +1,402 @@
+"""reprolint + shape-contract fleet: the static-analysis gate itself.
+
+Three layers:
+
+* **rule engine** — one known-violation / known-clean fixture pair per
+  rule (RETRACE, COLLECTIVE, DTYPE, PRNG, PURITY), pragma suppression,
+  and the baseline round-trip;
+* **shape fleet** — entries build deterministically, the committed
+  goldens match, and a mutated config field (the drift the fleet exists
+  to catch) produces a non-empty field-level diff;
+* **tool** — ``tools/check_static.py`` exits non-zero on a seeded
+  violation of every rule and on golden drift, zero on current ``src/``
+  with the committed baseline (the acceptance criterion, exercised the
+  same way the verify skill runs it).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import analysis
+from repro.analysis import engine, shapes
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# --- fixture snippets: (violating source, clean twin) per rule -------------
+
+SNIPPETS = {
+    "RETRACE": (
+        """
+import jax
+def run(xs):
+    for x in xs:
+        f = jax.jit(lambda v: v + 1)
+        f(x)
+""",
+        """
+import jax
+f = jax.jit(lambda v: v + 1)
+def run(xs):
+    for x in xs:
+        f(x)
+""",
+    ),
+    "COLLECTIVE": (
+        """
+import jax
+def local(v):
+    return jax.lax.psum(v, "model")
+""",
+        """
+import jax
+def local(v, axis=None):
+    if axis is not None:
+        v = jax.lax.psum(v, axis)
+    return v
+""",
+    ),
+    "DTYPE": (
+        """
+import numpy as np, jax.numpy as jnp
+def norm(x):
+    return np.sqrt(jnp.sum(x * x))
+""",
+        """
+import numpy as np, jax.numpy as jnp
+def norm(x):
+    return jnp.sqrt(jnp.sum(x * x))
+""",
+    ),
+    "PRNG": (
+        """
+import jax
+def init(key):
+    a = jax.random.normal(key, (3,))
+    b = jax.random.uniform(key, (3,))
+    return a, b
+""",
+        """
+import jax
+def init(key):
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (3,))
+    b = jax.random.uniform(kb, (3,))
+    return a, b
+""",
+    ),
+    "PURITY": (
+        """
+import jax
+@jax.jit
+def f(x):
+    print(x)
+    return x * 2
+""",
+        """
+import jax
+@jax.jit
+def f(x):
+    jax.debug.print("x={x}", x=x)
+    return x * 2
+""",
+    ),
+}
+
+
+@pytest.mark.parametrize("rule", sorted(SNIPPETS))
+def test_rule_flags_violation_and_passes_clean(rule):
+    bad, clean = SNIPPETS[rule]
+    bad_findings = analysis.lint_source(bad, f"{rule}_bad.py")
+    assert any(f.rule == rule for f in bad_findings), (
+        f"{rule}: violation fixture not flagged; got {bad_findings}")
+    clean_findings = [f for f in analysis.lint_source(
+        clean, f"{rule}_clean.py") if f.rule == rule]
+    assert clean_findings == [], (
+        f"{rule}: clean fixture flagged: "
+        f"{[f.render() for f in clean_findings]}")
+
+
+def test_more_retrace_shapes():
+    # unhashable static arg at a jitted call site
+    src = """
+import jax, jax.numpy as jnp
+def f(x, n): return x * n
+g = jax.jit(f, static_argnums=(1,))
+y = g(1.0, jnp.arange(3))
+"""
+    assert any(f.rule == "RETRACE" and "static" in f.message
+               for f in analysis.lint_source(src, "s.py"))
+    # Python branching on a traced parameter
+    src = """
+import jax
+@jax.jit
+def f(x):
+    if x > 0:
+        return x
+    return -x
+"""
+    assert any(f.rule == "RETRACE" and "traced parameter" in f.message
+               for f in analysis.lint_source(src, "b.py"))
+    # shape/None tests are static -> clean
+    src = """
+import jax
+@jax.jit
+def f(x, h=None):
+    if h is not None and x.shape[0] > 2:
+        return x * 2
+    return x
+"""
+    assert analysis.lint_source(src, "c.py") == []
+
+
+def test_collective_on_replicated_path_flagged():
+    src = """
+import jax
+def run(v, exec_path, axis):
+    if exec_path == "replicated":
+        return jax.lax.psum(v, axis)
+    return v
+"""
+    fs = analysis.lint_source(src, "r.py")
+    assert any(f.rule == "COLLECTIVE" and "replicated" in f.message
+               for f in fs)
+    # collectives on the non-replicated side are fine
+    src_ok = """
+import jax
+def run(v, exec_path, axis):
+    if exec_path == "replicated":
+        return v
+    return jax.lax.psum(v, axis)
+"""
+    assert analysis.lint_source(src_ok, "ok.py") == []
+
+
+def test_prng_branches_and_resplit_not_flagged():
+    src = """
+import jax
+def init(key, uniform):
+    if uniform:
+        return jax.random.uniform(key, (3,))
+    else:
+        return jax.random.normal(key, (3,))
+"""
+    assert analysis.lint_source(src, "branch.py") == []
+    src = """
+import jax
+def init(key):
+    a = jax.random.normal(key, (3,))
+    key, sub = jax.random.split(key)
+    b = jax.random.uniform(key, (3,))
+    return a, b
+"""
+    assert analysis.lint_source(src, "resplit.py") == []
+
+
+def test_pragma_suppression():
+    bad, _ = SNIPPETS["PURITY"]
+    line_pragma = bad.replace("print(x)",
+                              "print(x)  # reprolint: disable=PURITY")
+    assert analysis.lint_source(line_pragma, "p.py") == []
+    file_pragma = "# reprolint: disable-file=PURITY\n" + bad
+    assert analysis.lint_source(file_pragma, "p.py") == []
+    # pragma for a DIFFERENT rule does not silence it
+    wrong = bad.replace("print(x)",
+                        "print(x)  # reprolint: disable=DTYPE")
+    assert any(f.rule == "PURITY"
+               for f in analysis.lint_source(wrong, "p.py"))
+
+
+def test_baseline_round_trip(tmp_path):
+    bad, _ = SNIPPETS["DTYPE"]
+    f = tmp_path / "mod.py"
+    f.write_text(bad)
+    findings = analysis.lint_paths([f], root=tmp_path)
+    assert analysis.gating(findings), "fixture must gate pre-baseline"
+
+    bl_path = tmp_path / "baseline.json"
+    analysis.save_baseline(findings, bl_path)
+    reloaded = analysis.load_baseline(bl_path)
+    again = analysis.lint_paths([f], root=tmp_path, baseline=reloaded)
+    assert analysis.gating(again) == [], "baselined findings must not gate"
+    assert all(x.baselined for x in again)
+
+    # line drift alone must not invalidate the baseline fingerprint
+    f.write_text("\n\n" + bad)
+    drifted = analysis.lint_paths([f], root=tmp_path, baseline=reloaded)
+    assert analysis.gating(drifted) == []
+
+    # a NEW finding of the same rule still gates (multiset semantics)
+    f.write_text(bad + "\ndef g(y):\n"
+                 "    return np.sqrt(jnp.sum(y))\n")
+    extra = analysis.lint_paths([f], root=tmp_path, baseline=reloaded)
+    assert len(analysis.gating(extra)) == 1
+
+
+def test_report_tier_never_gates():
+    bad, _ = SNIPPETS["DTYPE"]
+    findings = analysis.lint_source(bad, "bench.py",
+                                    tier=analysis.TIER_REPORT)
+    assert findings and analysis.gating(findings) == []
+
+
+def test_repo_report_roots_lint_without_crashing():
+    # benchmarks/tests must LINT (no syntax crashes, no gating tier);
+    # findings there are informational by design
+    findings = analysis.lint_paths(
+        [os.path.join(REPO, "benchmarks"), os.path.join(REPO, "tests")],
+        root=REPO, tier=analysis.TIER_REPORT)
+    assert analysis.gating(findings) == []
+    assert not any("syntax error" in f.message or "unreadable" in f.message
+                   for f in findings)
+
+
+def test_src_is_clean_with_committed_baseline():
+    baseline = analysis.load_baseline(
+        os.path.join(REPO, "tools", "reprolint_baseline.json"))
+    findings = analysis.lint_paths([os.path.join(REPO, "src")],
+                                   root=REPO, baseline=baseline)
+    assert analysis.gating(findings) == [], (
+        "new reprolint findings in src/:\n"
+        + "\n".join(f.render() for f in analysis.gating(findings)))
+
+
+# --- shape-contract fleet --------------------------------------------------
+
+GOLDEN_DIR = os.path.join(REPO, "tests", "golden", "shapes")
+
+
+def test_fleet_entry_deterministic():
+    e1 = shapes.build_entry("qwen3_1p7b", "mixed_mlp2_attn4")
+    e2 = shapes.build_entry("qwen3_1p7b", "mixed_mlp2_attn4")
+    assert json.dumps(e1, sort_keys=True) == json.dumps(e2, sort_keys=True)
+
+
+def test_committed_goldens_match_one_cell():
+    cell = ("qwen3_1p7b", "cloq_int4")
+    errs = shapes.run_fleet(GOLDEN_DIR, cells=[cell])
+    assert errs == [], "\n".join(errs)
+
+
+def test_golden_drift_detected_on_config_mutation(monkeypatch):
+    """Mutate one config field the way real interface drift would: the
+    fleet must fail with a field-level message, not silently pass."""
+    import dataclasses
+
+    from repro import configs
+
+    real = configs.get_smoke_config
+
+    def mutated(name, **overrides):
+        cfg = real(name, **overrides)
+        return dataclasses.replace(cfg, d_ff=cfg.d_ff * 2)
+
+    monkeypatch.setattr(configs, "get_smoke_config", mutated)
+    errs = shapes.run_fleet(GOLDEN_DIR, cells=[("qwen3_1p7b",
+                                                "cloq_int4")])
+    assert errs, "doubled d_ff must produce manifest drift"
+    joined = "\n".join(errs)
+    assert "shapes" in joined or "buckets" in joined or \
+        "plan_bytes" in joined
+
+
+def test_golden_drift_detected_on_recipe_mutation(monkeypatch):
+    from repro.analysis import shapes as shp
+
+    real = shp.recipe_grid
+
+    def mutated(group_size=32):
+        grid = real(group_size)
+        import dataclasses
+        r = grid["cloq_int4"]
+        grid["cloq_int4"] = dataclasses.replace(
+            r, qspec=dataclasses.replace(r.qspec, rank=r.qspec.rank * 2))
+        return grid
+
+    monkeypatch.setattr(shp, "recipe_grid", mutated)
+    errs = shp.run_fleet(GOLDEN_DIR, cells=[("qwen3_1p7b", "cloq_int4")])
+    assert any("rank" in e or "shapes" in e or "recipe" in e
+               for e in errs), errs
+
+
+def test_update_golden_is_deterministic(tmp_path):
+    cells = [("qwen3_1p7b", "rtn3_skip_mlp")]
+    shapes.run_fleet(tmp_path, update=True, cells=cells)
+    first = shapes.entry_path(tmp_path, *cells[0]).read_text()
+    changed = shapes.run_fleet(tmp_path, update=True, cells=cells)
+    assert changed == [], "regenerating an unchanged contract must be " \
+                          "a no-op"
+    assert shapes.entry_path(tmp_path, *cells[0]).read_text() == first
+    # stable JSON key order: top-level keys serialized sorted
+    keys = list(json.loads(first))
+    assert keys == sorted(keys)
+
+
+# --- the tool: exit codes end-to-end ---------------------------------------
+
+
+def _run_tool(*args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "check_static.py"),
+         *args],
+        capture_output=True, text=True, timeout=600, cwd=cwd)
+
+
+def test_check_static_passes_on_current_repo():
+    proc = _run_tool()
+    assert proc.returncode == 0, (
+        f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    assert "static OK" in proc.stdout
+
+
+def _import_tool():
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    import tools.check_static as cs
+    return cs
+
+
+@pytest.mark.parametrize("rule", sorted(SNIPPETS))
+def test_check_static_fails_on_seeded_violation(rule, tmp_path,
+                                                monkeypatch, capsys):
+    """Seed one violation of each rule into a scratch 'src' tree and run
+    the real tool against it: must exit 1 and name the rule."""
+    cs = _import_tool()
+    bad, _ = SNIPPETS[rule]
+    src_dir = tmp_path / "src"
+    src_dir.mkdir()
+    (src_dir / "seeded.py").write_text(bad)
+    monkeypatch.setattr(cs, "REPO", tmp_path)
+    rc = cs.main(["--no-shapes",
+                  "--baseline", str(tmp_path / "empty_baseline.json")])
+    out = capsys.readouterr().out
+    assert rc == 1, out
+    assert rule in out and "FAIL" in out
+
+
+def test_check_static_fails_on_golden_mismatch(tmp_path, monkeypatch,
+                                               capsys):
+    """Corrupt one committed golden in a scratch copy: the tool's fleet
+    check must exit 1 naming the drifted field."""
+    import shutil
+    cs = _import_tool()
+    scratch = tmp_path / "shapes"
+    shutil.copytree(GOLDEN_DIR, scratch)
+    path = shapes.entry_path(scratch, "qwen3_1p7b", "cloq_int4")
+    entry = json.loads(path.read_text())
+    entry["plan_bytes"] += 1
+    path.write_text(json.dumps(entry, indent=1, sort_keys=True) + "\n")
+    monkeypatch.setattr(cs, "GOLDEN_DIR", scratch)
+    monkeypatch.setattr(shapes, "fleet_cells",
+                        lambda: [("qwen3_1p7b", "cloq_int4")])
+    rc = cs.main(["--no-lint"])
+    out = capsys.readouterr().out
+    assert rc == 1, out
+    assert "plan_bytes" in out
+
+
+def test_check_static_usage_error():
+    cs = _import_tool()
+    assert cs.main(["--no-lint", "--no-shapes"]) == 2

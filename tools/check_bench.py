@@ -19,9 +19,10 @@ Wired into the verify skill (`.claude/skills/verify/SKILL.md`):
 
     python tools/check_bench.py
 
-Exits 0 when every present file satisfies its floors; a MISSING result
-file is reported but non-fatal (benchmarks are regenerated on demand, not
-checked into every environment), a present-but-regressed value fails.
+A MISSING result file is reported but non-fatal (benchmarks are
+regenerated on demand, not checked into every environment); a
+present-but-regressed value fails.  Exit codes follow
+:mod:`tools.checklib`: 0 clean, 1 floor violation, 2 usage error.
 """
 from __future__ import annotations
 
@@ -30,6 +31,10 @@ import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from tools import checklib  # noqa: E402
+
 RESULTS = REPO / "results"
 
 # (file, dotted key path, floor, strict) — strict=True means "> floor",
@@ -47,34 +52,37 @@ def _lookup(obj, dotted: str):
     return obj
 
 
-def main() -> int:
-    errors, missing, checked = [], [], 0
-    for fname, key, floor, strict in FLOORS:
+def _floor_check(fname: str, key: str, floor: float,
+                 strict: bool) -> checklib.Check:
+    name = f"{fname}:{key}"
+
+    def check() -> checklib.CheckResult:
         path = RESULTS / fname
         if not path.exists():
-            missing.append(f"{fname} (skipped: not generated)")
-            continue
+            return checklib.CheckResult(name, skipped=True,
+                                        detail="not generated")
+        op = ">" if strict else ">="
         try:
             value = float(_lookup(json.loads(path.read_text()), key))
         except (KeyError, TypeError, ValueError) as e:
-            errors.append(f"{fname}: cannot read {key!r} ({e!r})")
-            continue
+            return checklib.CheckResult(
+                name, errors=[f"cannot read {key!r} ({e!r})"])
         ok = value > floor if strict else value >= floor
-        op = ">" if strict else ">="
         if not ok:
-            errors.append(f"{fname}: {key} = {value} violates floor "
-                          f"{op} {floor}")
-        else:
-            print(f"  ok: {fname} {key} = {value} ({op} {floor})")
-            checked += 1
-    for m in missing:
-        print(f"  {m}")
-    if errors:
-        print("\n".join(errors))
-        print(f"FAILED: {len(errors)} benchmark floor violation(s)")
-        return 1
-    print(f"bench floors OK: {checked} checked, {len(missing)} skipped")
-    return 0
+            return checklib.CheckResult(
+                name, errors=[f"{key} = {value} violates floor "
+                              f"{op} {floor}"])
+        return checklib.CheckResult(name,
+                                    detail=f"{value} ({op} {floor})")
+    check.__name__ = name
+    return check
+
+
+def main(argv=None) -> int:
+    checklib.make_parser("check_bench.py",
+                         "perf floors over results/*.json").parse_args(argv)
+    return checklib.run_checks(
+        "bench", [_floor_check(*f) for f in FLOORS])
 
 
 if __name__ == "__main__":

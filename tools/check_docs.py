@@ -13,6 +13,9 @@ Wired into the verify skill (`.claude/skills/verify/SKILL.md`) and run by
 ``tests/test_docs.py``:
 
     python tools/check_docs.py
+
+Scaffolding (result rows, exit-code convention) comes from
+:mod:`tools.checklib`: 0 clean, 1 failures, 2 usage error.
 """
 from __future__ import annotations
 
@@ -23,13 +26,17 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO))
+
+from tools import checklib  # noqa: E402
 
 DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
 DOCTEST_MODULES = ["repro.core.batched", "repro.core.allocate",
                    "repro.core.health", "repro.core.faults",
                    "repro.core.costmodel", "repro.core.compile_cache",
                    "repro.serve", "repro.serve.kv_cache",
-                   "repro.serve.scheduler"]
+                   "repro.serve.scheduler",
+                   "repro.analysis", "repro.analysis.engine"]
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
@@ -75,7 +82,7 @@ def check_links(path: Path) -> list[str]:
     return errors
 
 
-def main() -> int:
+def _files_check() -> checklib.CheckResult:
     errors = []
     for f in DOC_FILES:
         if not f.exists():
@@ -83,15 +90,25 @@ def main() -> int:
             continue
         errors += check_doctests(f)
         errors += check_links(f)
+    return checklib.CheckResult(
+        "doc files", errors=errors,
+        detail=f"{len(DOC_FILES)} files, doctests + links")
+
+
+def _modules_check() -> checklib.CheckResult:
+    errors = []
     for m in DOCTEST_MODULES:
         errors += check_module_doctests(m)
-    if errors:
-        print("\n".join(errors))
-        print(f"FAILED: {len(errors)} doc problem(s)")
-        return 1
-    n_files = len(DOC_FILES)
-    print(f"docs OK: {n_files} files, doctests + links clean")
-    return 0
+    return checklib.CheckResult(
+        "module doctests", errors=errors,
+        detail=f"{len(DOCTEST_MODULES)} modules")
+
+
+def main(argv=None) -> int:
+    checklib.make_parser("check_docs.py",
+                         "doctests + link existence for README/docs"
+                         ).parse_args(argv)
+    return checklib.run_checks("docs", [_files_check, _modules_check])
 
 
 if __name__ == "__main__":

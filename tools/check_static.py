@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""Static-analysis gate: reprolint rules + golden shape manifests.
+
+Two zero-FLOP passes (:mod:`repro.analysis`), run before anything
+compiles:
+
+1. **reprolint** — the JAX-aware AST rules (RETRACE / COLLECTIVE /
+   DTYPE / PRNG / PURITY) over ``src/`` at gating severity and over
+   ``benchmarks/ tests/ tools/ examples/`` at report-only severity
+   (intentional host-side numpy in bench/test scripts prints but never
+   fails).  Pre-existing findings live in the committed baseline
+   (``--baseline``, default ``tools/reprolint_baseline.json``); new
+   findings gate.  Suppress single lines with
+   ``# reprolint: disable=RULE``.
+2. **shape-contract fleet** — every ``repro.configs`` architecture × the
+   recipe grid, ``jax.eval_shape``d through the planner/recipe/layout
+   stack and diffed against ``tests/golden/shapes/*.json``.
+
+Wired into the verify skill (`.claude/skills/verify/SKILL.md`) next to
+``check_docs.py`` / ``check_bench.py``::
+
+    PYTHONPATH=src python tools/check_static.py
+    PYTHONPATH=src python tools/check_static.py --update-golden   # bless drift
+    PYTHONPATH=src python tools/check_static.py --update-baseline # re-baseline
+
+Exit codes follow :mod:`tools.checklib`: 0 clean, 1 gating findings or
+manifest drift, 2 usage error.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO))
+
+from tools import checklib  # noqa: E402
+
+GATING_ROOTS = ["src"]
+REPORT_ROOTS = ["benchmarks", "tests", "tools", "examples"]
+DEFAULT_BASELINE = REPO / "tools" / "reprolint_baseline.json"
+GOLDEN_DIR = REPO / "tests" / "golden" / "shapes"
+
+
+def lint_gating(baseline_path: Path, update_baseline: bool):
+    from repro import analysis
+
+    def check() -> checklib.CheckResult:
+        baseline = analysis.load_baseline(baseline_path)
+        findings = analysis.lint_paths(
+            [REPO / r for r in GATING_ROOTS], root=REPO,
+            tier=analysis.TIER_ERROR, baseline=baseline)
+        if update_baseline:
+            analysis.save_baseline(analysis.gating(findings),
+                                   baseline_path)
+            return checklib.CheckResult(
+                "reprolint[src]",
+                detail=f"baseline rewritten: "
+                       f"{len(analysis.gating(findings))} entr(ies)")
+        gating = analysis.gating(findings)
+        infos = [f.render() for f in findings if f.baselined]
+        return checklib.CheckResult(
+            "reprolint[src]",
+            errors=[f.render() for f in gating],
+            infos=infos,
+            detail=("clean" if not findings else
+                    analysis.summarize(findings)))
+    check.__name__ = "reprolint[src]"
+    return check
+
+
+def lint_report():
+    from repro import analysis
+
+    def check() -> checklib.CheckResult:
+        findings = analysis.lint_paths(
+            [REPO / r for r in REPORT_ROOTS], root=REPO,
+            tier=analysis.TIER_REPORT)
+        return checklib.CheckResult(
+            "reprolint[bench/tests]",
+            infos=[f.render() for f in findings],
+            detail=f"report-only: {analysis.summarize(findings)}")
+    check.__name__ = "reprolint[bench/tests]"
+    return check
+
+
+def shape_fleet(update_golden: bool):
+    def check() -> checklib.CheckResult:
+        from repro.analysis import shapes
+        msgs = shapes.run_fleet(GOLDEN_DIR, update=update_golden)
+        n = len(shapes.fleet_cells())
+        if update_golden:
+            return checklib.CheckResult(
+                "shape-fleet", infos=msgs,
+                detail=f"{n} golden manifest(s) regenerated "
+                       f"({len(msgs)} changed)")
+        return checklib.CheckResult(
+            "shape-fleet", errors=msgs,
+            detail=f"{n} (arch x recipe) cells vs {GOLDEN_DIR.name}/")
+    check.__name__ = "shape-fleet"
+    return check
+
+
+def main(argv=None) -> int:
+    p = checklib.make_parser(
+        "check_static.py",
+        "reprolint rules + golden shape manifests (zero-FLOP gate)")
+    p.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                   help="reprolint baseline file")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="rewrite the baseline from current src findings "
+                        "(then exit 0)")
+    p.add_argument("--update-golden", action="store_true",
+                   help="deterministically regenerate every golden shape "
+                        "manifest (then exit 0)")
+    p.add_argument("--no-shapes", action="store_true",
+                   help="skip the shape-contract fleet (AST rules only)")
+    p.add_argument("--no-lint", action="store_true",
+                   help="skip the AST rules (shape fleet only)")
+    p.add_argument("-v", "--verbose", action="store_true",
+                   help="print every report-only/baselined finding "
+                        "(default: counts only)")
+    args = p.parse_args(argv)
+    if args.no_shapes and args.no_lint:
+        return checklib.usage_error("--no-shapes with --no-lint leaves "
+                                    "nothing to check")
+    checks = []
+    if not args.no_lint:
+        checks.append(lint_gating(args.baseline, args.update_baseline))
+        checks.append(lint_report())
+    if not args.no_shapes:
+        checks.append(shape_fleet(args.update_golden))
+    return checklib.run_checks("static", checks,
+                               verbose_infos=args.verbose)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

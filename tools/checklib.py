@@ -1,0 +1,112 @@
+"""Shared scaffolding for the repo's check tools.
+
+``check_docs.py`` / ``check_bench.py`` / ``check_static.py`` all follow
+the same convention; this module is its single home:
+
+* **exit codes** — 0 everything passed, 1 at least one gating failure,
+  2 usage/configuration error (:data:`EXIT_OK` / :data:`EXIT_FAIL` /
+  :data:`EXIT_USAGE`);
+* **result model** — each tool runs named :class:`Check`s producing
+  ``(errors, infos)``; errors gate, infos print;
+* **reporting** — :func:`run_checks` prints one aligned result row per
+  check (name, ok/FAIL/skip, detail), the collected error lines, and a
+  one-line summary, then returns the exit code for ``sys.exit``;
+* **arg parsing** — :func:`make_parser` gives every tool the same
+  prolog/epilog shape.
+
+Keeping the scaffolding here means a new checker is just its check
+functions plus a ``main`` of three lines — see ``check_static.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from pathlib import Path
+from typing import Callable, Iterable, Sequence
+
+EXIT_OK = 0
+EXIT_FAIL = 1
+EXIT_USAGE = 2
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@dataclasses.dataclass
+class CheckResult:
+    """Outcome of one named check.
+
+    ``errors`` gate (non-zero exit); ``infos`` are printed but never
+    fail the run (report-only findings, skipped-file notes);
+    ``skipped`` marks a check that could not run in this environment
+    (missing results file) — reported, non-fatal."""
+    name: str
+    errors: list[str] = dataclasses.field(default_factory=list)
+    infos: list[str] = dataclasses.field(default_factory=list)
+    detail: str = ""
+    skipped: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors and not self.skipped
+
+
+Check = Callable[[], CheckResult]
+
+
+def make_parser(tool: str, description: str) -> argparse.ArgumentParser:
+    return argparse.ArgumentParser(
+        prog=f"tools/{tool}", description=description,
+        epilog="exit codes: 0 ok, 1 gating failure(s), 2 usage error",
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter)
+
+
+def run_checks(tool: str, checks: Iterable[Check], *,
+               verbose_infos: bool = True) -> int:
+    """Run every check, print the result table + failures, return the
+    exit code (the tool's ``main`` is ``sys.exit(run_checks(...))``)."""
+    results: list[CheckResult] = []
+    for check in checks:
+        try:
+            results.append(check())
+        except Exception as e:                       # noqa: BLE001 — a
+            # crashing check must report as a failure, not a traceback
+            name = getattr(check, "__name__", repr(check))
+            results.append(CheckResult(name, errors=[f"crashed: {e!r}"]))
+    width = max((len(r.name) for r in results), default=0)
+    n_err = 0
+    for r in results:
+        status = "skip" if r.skipped else ("ok" if not r.errors else "FAIL")
+        detail = r.detail or (f"{len(r.errors)} error(s)" if r.errors
+                              else "")
+        print(f"  {r.name:<{width}}  {status:<4}  {detail}".rstrip())
+        if verbose_infos:
+            for line in r.infos:
+                print(f"    {line}")
+        for line in r.errors:
+            print(f"    {line}")
+        n_err += len(r.errors)
+    n_skip = sum(r.skipped for r in results)
+    if n_err:
+        print(f"{tool} FAILED: {n_err} problem(s) in "
+              f"{sum(1 for r in results if r.errors)} check(s)")
+        return EXIT_FAIL
+    tail = f", {n_skip} skipped" if n_skip else ""
+    print(f"{tool} OK: {len(results) - n_skip} check(s) passed{tail}")
+    return EXIT_OK
+
+
+def usage_error(msg: str) -> int:
+    print(f"error: {msg}", file=sys.stderr)
+    return EXIT_USAGE
+
+
+def list_check(name: str, fn: Callable[[], Sequence[str]],
+               detail: str = "") -> Check:
+    """Adapt a plain ``() -> [error, ...]`` function into a Check."""
+    def check() -> CheckResult:
+        errors = list(fn())
+        return CheckResult(name, errors=errors,
+                           detail=detail if not errors else "")
+    check.__name__ = name
+    return check
