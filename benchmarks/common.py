@@ -70,6 +70,7 @@ def pretrained_lm(steps: int | None = None, force: bool = False):
     t0 = time.time()
     for i in range(steps):
         st, m = step(st, ds.next_batch())
+    jax.block_until_ready(st)       # fence the async final step (BENCH)
     params = merge_params(st["train"], st["frozen"])
     print(f"[bench-lm] pretrained {steps} steps in {time.time()-t0:.0f}s "
           f"(final loss {float(m['loss']):.3f}, "

@@ -142,6 +142,11 @@ def run() -> dict:
     }
     with open(os.path.join(RESULTS, "serve_bench.json"), "w") as f:
         json.dump(result, f, indent=1)
+
+    # registry snapshot (the engines above incremented serve.* as they
+    # admitted/decoded/retired) for check_bench counter floors
+    from repro.obs import metrics as obs_metrics
+    obs_metrics.save(os.path.join(RESULTS, "metrics-serve_bench.json"))
     return result
 
 

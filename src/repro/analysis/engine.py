@@ -1,7 +1,8 @@
 """reprolint rule engine: findings, pragmas, baselines, severity tiers.
 
 A :class:`Finding` is one structural hazard at ``path:line`` with a rule
-id (RETRACE / COLLECTIVE / DTYPE / PRNG / PURITY) and a fix hint.  The
+id (RETRACE / COLLECTIVE / DTYPE / PRNG / PURITY / BENCH) and a fix
+hint.  The
 engine layers three suppression mechanisms, in order:
 
 1. **pragmas** — ``# reprolint: disable=RULE[,RULE2|all]`` on the finding
@@ -19,8 +20,9 @@ engine layers three suppression mechanisms, in order:
    so intentional host-side numpy in bench scripts never pages anyone.
 
 The rules themselves live in :mod:`repro.analysis.rules_trace`,
-:mod:`repro.analysis.rules_collective`, and
-:mod:`repro.analysis.rules_numeric`; each exports ``check(tree, src,
+:mod:`repro.analysis.rules_collective`,
+:mod:`repro.analysis.rules_numeric`, and
+:mod:`repro.analysis.rules_bench`; each exports ``check(tree, src,
 path) -> list[Finding]`` functions registered in :data:`ALL_RULES`.
 """
 from __future__ import annotations
@@ -33,7 +35,7 @@ from pathlib import Path
 
 from repro.analysis import astlib
 
-RULE_IDS = ("RETRACE", "COLLECTIVE", "DTYPE", "PRNG", "PURITY")
+RULE_IDS = ("RETRACE", "COLLECTIVE", "DTYPE", "PRNG", "PURITY", "BENCH")
 
 TIER_ERROR = "error"
 TIER_REPORT = "report"
@@ -149,11 +151,12 @@ def apply_baseline(findings: list[Finding],
 def all_rules():
     """Rule checkers, imported lazily so ``repro.analysis`` stays
     importable without pulling every rule module up front."""
-    from repro.analysis import (rules_collective, rules_numeric,
-                                rules_trace)
+    from repro.analysis import (rules_bench, rules_collective,
+                                rules_numeric, rules_trace)
     return (rules_trace.check_retrace, rules_trace.check_purity,
             rules_collective.check_collective,
-            rules_numeric.check_dtype, rules_numeric.check_prng)
+            rules_numeric.check_dtype, rules_numeric.check_prng,
+            rules_bench.check_bench)
 
 
 def lint_source(source: str, path: str = "<string>", *,

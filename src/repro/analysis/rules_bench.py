@@ -1,0 +1,133 @@
+"""BENCH rule: wall-clock deltas around un-fenced jitted dispatch.
+
+JAX dispatch is asynchronous: a jitted call returns the instant XLA
+*enqueues* the program, so
+
+    t0 = time.perf_counter()
+    out = step_fn(x)                 # step_fn = jax.jit(...)
+    dt = time.perf_counter() - t0    # measures enqueue, not compute
+
+silently times host-side dispatch.  Every such timing must reach a
+``jax.block_until_ready(...)`` (or ``jax.device_get``, which implies a
+sync) before the stop timestamp is read.
+
+Detection is scope-local and line-ordered: within one function (or the
+module body), an assignment ``t = time.time()|perf_counter()|monotonic()``
+followed by a ``<time call or timer name> - t`` subtraction delimits a
+timed region; the region is flagged when it contains a call to a known
+jitted binding (``name = jax.jit(...)`` / jit-decorated ``def`` /
+inline ``jax.jit(f)(...)``) and no sync call.  Timing non-jitted Python
+is fine, and regions whose sync happens inside the timed span pass.
+
+Tiering mirrors the other rules (``tools/check_static.py``): gating in
+``src/``, report-only in ``benchmarks/`` — bench scripts that fence
+inside their timed closures never page anyone.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astlib
+from repro.analysis.engine import Finding
+
+# timer sources whose subtraction delimits a timed region
+_TIME_CALLS = {"time.time", "time.perf_counter", "time.monotonic",
+               "perf_counter", "monotonic"}
+# calls that force (or imply) device completion
+_SYNC_CALLS = {"jax.block_until_ready", "block_until_ready",
+               "jax.device_get", "device_get"}
+
+
+def _is_time_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and astlib.call_target(node) in _TIME_CALLS)
+
+
+def _jitted_names(tree: ast.Module) -> set[str]:
+    """Names whose call is an async device dispatch: jit-bound
+    assignments plus jit-decorated function defs."""
+    names = set(astlib.jitted_bindings(tree))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            if astlib.decorator_targets(node) & astlib.JIT_WRAPPERS:
+                names.add(node.name)
+    return names
+
+
+def _scopes(tree: ast.Module):
+    """Yield (scope node, [nodes directly in scope]) — nested function
+    bodies belong to their own scope, not the enclosing one."""
+    funcs = [n for n in ast.walk(tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for scope in [tree, *funcs]:
+        nodes = []
+        for node in ast.walk(scope):
+            if node is scope:
+                continue
+            owner = astlib.enclosing_function(node)
+            while owner is not None and not isinstance(
+                    owner, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                owner = astlib.enclosing_function(owner)
+            if (owner is scope) or (owner is None and scope is tree):
+                nodes.append(node)
+        yield scope, nodes
+
+
+def check_bench(tree: ast.Module, source: str,
+                path: str) -> list[Finding]:
+    jitted = _jitted_names(tree)
+    findings: list[Finding] = []
+    for scope, nodes in _scopes(tree):
+        starts: list[tuple[int, str]] = []      # (line, timer name)
+        jit_lines: list[int] = []
+        sync_lines: list[int] = []
+        deltas: list[tuple[int, str]] = []      # (line, rhs timer name)
+        for node in nodes:
+            if isinstance(node, ast.Assign) and _is_time_call(node.value):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        starts.append((node.lineno, tgt.id))
+            elif isinstance(node, ast.Call):
+                target = astlib.call_target(node)
+                if target in _SYNC_CALLS:
+                    sync_lines.append(node.lineno)
+                elif (target in jitted
+                      or (isinstance(node.func, ast.Call)
+                          and astlib.call_target(node.func)
+                          in astlib.JIT_WRAPPERS)):
+                    jit_lines.append(node.lineno)
+                # .block_until_ready() method form on an array
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr == "block_until_ready"):
+                    sync_lines.append(node.lineno)
+            elif (isinstance(node, ast.BinOp)
+                  and isinstance(node.op, ast.Sub)
+                  and isinstance(node.right, ast.Name)):
+                lhs_ok = (_is_time_call(node.left)
+                          or isinstance(node.left, ast.Name))
+                if lhs_ok:
+                    deltas.append((node.lineno, node.right.id))
+        timer_names = {n for _, n in starts}
+        for stop_line, rhs in deltas:
+            if rhs not in timer_names:
+                continue
+            opens = [ln for ln, n in starts
+                     if n == rhs and ln < stop_line]
+            if not opens:
+                continue
+            start_line = max(opens)
+            timed_jit = [ln for ln in jit_lines
+                         if start_line < ln < stop_line]
+            if not timed_jit:
+                continue
+            if any(start_line < ln < stop_line for ln in sync_lines):
+                continue
+            findings.append(Finding(
+                "BENCH", path, stop_line,
+                f"wall-clock delta over jitted dispatch at line "
+                f"{timed_jit[0]} with no device sync — measures XLA "
+                "enqueue, not compute",
+                hint="jax.block_until_ready(result) before reading the "
+                     "stop timestamp",
+                context=astlib.function_name(scope)))
+    return findings

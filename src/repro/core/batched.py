@@ -71,6 +71,10 @@ from repro.core.optq import (optq_quantize_core, optq_quantize_sharded,
                              pick_block)
 from repro.core.quantizer import (QuantConfig, dequantize_int, pack_codes,
                                   quantize_int)
+from repro.obs import log as obs_log
+from repro.obs import metrics as obs_metrics
+from repro.obs import names as obs_names
+from repro.obs import trace as obs_trace
 
 Array = jax.Array
 
@@ -717,9 +721,10 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
         method:   fallback init method (see module docstring).
         base:     optional ``QuantConfig`` overriding sweep defaults.
         progress: optional callback, called once per *bucket* with a
-                  human-readable plan-composition line
-                  (``method/bits/rank x layer-count x shard-count``) so
-                  long mixed runs are observable.
+                  structured ``[bucket] key=value`` plan-composition line
+                  (:func:`repro.obs.log.format_event`: spec, shape, layer
+                  count, execution path, cache tallies from the metrics
+                  registry) so long mixed runs are observable.
         mesh:     optional ``jax.sharding.Mesh``: buckets run column-sharded
                   over ``axis`` where the planner allows (see
                   :func:`plan_buckets`); ``None`` = single-device.
@@ -772,8 +777,10 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
 
     cost_model = CostModel.coerce(cost_model)
     cache = CompileCache.coerce(compile_cache)
-    buckets = plan_buckets(tasks, qspec, method, base, mesh=mesh, axis=axis,
-                           cost_model=cost_model)
+    with obs_trace.span("quant.plan", tasks=len(tasks)) as sp:
+        buckets = plan_buckets(tasks, qspec, method, base, mesh=mesh,
+                               axis=axis, cost_model=cost_model)
+        sp.set(buckets=len(buckets))
     scope = (canonical_digest(plan_manifest(tasks, buckets, axis))
              if cache is not None else None)
     results: list[dict | None] = [None] * len(tasks)
@@ -793,6 +800,9 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
             if entry is None:
                 continue
             loaded[b] = entry[0]
+            obs_metrics.counter(obs_names.JOURNAL_RESTORED).inc()
+            obs_metrics.counter(obs_names.JOURNAL_SKIPPED_TASKS).inc(
+                len(idxs))
             if report is not None:
                 report.records.update(entry[1])
                 report.event(f"bucket {b} restored from journal "
@@ -801,7 +811,8 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
     def dispatch(b: int, staged) -> tuple[list[int], dict]:
         spec, idxs = items[b]
         Ws, Hs, keys = staged
-        cache_note = ""
+        path = "sharded" if spec.n_shards > 1 else spec.exec_path
+        cache_fields: dict = {}
         if spec.n_shards > 1:
             out = run_bucket_sharded(Ws, Hs, keys, spec, mesh, axis)
         elif spec.exec_path == "sequential":
@@ -811,19 +822,31 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
             out, hit = cache.call(
                 "bucket", {"scope": scope, "spec": dataclasses.asdict(spec),
                            "L": len(idxs)}, bucket_fn(spec), args)
-            cache_note = (f" [cache {'hit' if hit else 'miss'} "
-                          f"({cache.hits}h/{cache.misses}m)]")
+            # cache tallies come from the metrics registry (the
+            # CompileCache mirrors every hit/miss into it)
+            reg = obs_metrics.get_registry()
+            cache_fields = {
+                "cache": "hit" if hit else "miss",
+                "hits": reg.counter(obs_names.CACHE_HITS).value,
+                "misses": reg.counter(obs_names.CACHE_MISSES).value}
         else:
             out = run_bucket(Ws, Hs, keys, spec)
+        obs_metrics.counter(obs_names.QUANT_BUCKETS).inc()
+        obs_metrics.counter(obs_names.QUANT_TASKS).inc(len(idxs))
+        obs_metrics.counter(obs_names.QUANT_PATH + path).inc()
         if progress:
             g = "col" if spec.group_size is None else spec.group_size
-            shard_note = (f" sharded x{spec.n_shards}"
-                          if spec.n_shards > 1 else f" {spec.exec_path}"
-                          if spec.exec_path == "sequential" else " unsharded")
-            progress(f"[bucket {b}] {spec.method}/{spec.bits}b/g{g}/"
-                     f"r{spec.rank} {spec.m}x{spec.n} x{len(idxs)} "
-                     f"layers{shard_note}{cache_note}")
+            progress(obs_log.format_event(
+                "bucket", i=b,
+                spec=f"{spec.method}/{spec.bits}b/g{g}/r{spec.rank}",
+                shape=f"{spec.m}x{spec.n}", layers=len(idxs),
+                path=path, shards=spec.n_shards, **cache_fields))
         return idxs, out
+
+    def stage(b: int):
+        spec_b, idxs_b = items[b]
+        with obs_trace.span("bucket.stage", bucket=b, layers=len(idxs_b)):
+            return _stage_bucket(tasks, idxs_b, spec_b)
 
     staged = None
     for b in range(len(items)):
@@ -831,27 +854,37 @@ def quantize_layer_batch(tasks: list[LayerTask], qspec=None,
         if b in loaded:
             staged = None                        # prefetch was for bucket b
             if progress:
-                progress(f"[bucket {b}] restored from journal "
-                         f"(x{len(idxs)} layers)")
+                progress(obs_log.format_event(
+                    "bucket", i=b, restored="journal", layers=len(idxs)))
             for j, i in enumerate(idxs):
                 results[i] = loaded[b][j]
             continue
         if staged is None:
-            staged = _stage_bucket(tasks, idxs, spec)
+            staged = stage(b)
         cur = staged
-        idxs, out = dispatch(b, cur)             # async dispatch
+        with obs_trace.span("bucket.execute", bucket=b,
+                            path=("sharded" if spec.n_shards > 1
+                                  else spec.exec_path),
+                            shards=spec.n_shards,
+                            layers=len(idxs)) as sp:
+            idxs, out = dispatch(b, cur)         # async dispatch
+            sp.sync(out)    # REPRO_TRACE_SYNC=1: fence before span close
         staged = None
         if stream and b + 1 < len(items) and (b + 1) not in loaded:
             # double-buffer: stage bucket b+1 on the host while the device
             # computes bucket b
-            staged = _stage_bucket(tasks, items[b + 1][1], items[b + 1][0])
+            staged = stage(b + 1)
         elif not stream:
             jax.block_until_ready(out)           # serialize (oracle mode)
         for j, i in enumerate(idxs):
             results[i] = {k: v[j] for k, v in out.items()}
         if guarded:
-            ok = health.check_bucket(cur[0], out, spec, policy)
+            with obs_trace.span("bucket.health_check", bucket=b,
+                                layers=len(idxs)) as hsp:
+                ok = health.check_bucket(cur[0], out, spec, policy)
+                hsp.sync(ok)
             report.checked += len(idxs)
+            obs_metrics.counter(obs_names.HEALTH_CHECKED).inc(len(idxs))
             for j, i in enumerate(idxs):
                 if not ok[j]:
                     t = tasks[i]
@@ -908,11 +941,12 @@ def evaluate_layer_batch(tasks: list[LayerTask],
         Ws, Hs, keys = staged
         if progress:
             g = "col" if spec.group_size is None else spec.group_size
-            shard_note = (f" sharded x{spec.n_shards}"
-                          if spec.n_shards > 1 else " unsharded")
-            progress(f"[sweep {b}] {spec.method}/{spec.bits}b/g{g}/"
-                     f"r{spec.rank} {spec.m}x{spec.n} x{len(idxs)} "
-                     f"candidates{shard_note}")
+            progress(obs_log.format_event(
+                "sweep", i=b,
+                spec=f"{spec.method}/{spec.bits}b/g{g}/r{spec.rank}",
+                shape=f"{spec.m}x{spec.n}", candidates=len(idxs),
+                path=("sharded" if spec.n_shards > 1 else "replicated"),
+                shards=spec.n_shards))
         if spec.n_shards > 1:
             out = run_bucket_eval_sharded(Ws, Hs, keys, spec, mesh, axis)
         else:
@@ -923,7 +957,10 @@ def evaluate_layer_batch(tasks: list[LayerTask],
     for b in range(len(items)):
         if staged is None:
             staged = _stage_bucket(tasks, items[b][1], items[b][0])
-        idxs, out = dispatch(b, staged)          # async dispatch
+        with obs_trace.span("sweep.execute", bucket=b,
+                            candidates=len(items[b][1])) as sp:
+            idxs, out = dispatch(b, staged)      # async dispatch
+            sp.sync(out)
         staged = None
         if stream and b + 1 < len(items):
             staged = _stage_bucket(tasks, items[b + 1][1], items[b + 1][0])

@@ -52,7 +52,17 @@ from typing import Any, Callable
 
 import jax
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import names as obs_names
+
 _FORMAT = "xc1"          # serialize_executable triple, pickled
+
+_OBS_COUNTERS = {
+    "hits": obs_names.CACHE_HITS,
+    "misses": obs_names.CACHE_MISSES,
+    "corrupt": obs_names.CACHE_CORRUPT,
+    "unportable": obs_names.CACHE_UNPORTABLE,
+}
 
 
 def canonical_digest(obj) -> str:
@@ -94,6 +104,11 @@ class CompileCache:
         self.unportable = 0
         self._mem: dict[str, Any] = {}
 
+    def _tally(self, event: str) -> None:
+        """Bump the per-instance counter and its registry mirror."""
+        setattr(self, event, getattr(self, event) + 1)
+        obs_metrics.counter(_OBS_COUNTERS[event]).inc()
+
     @classmethod
     def coerce(cls, obj) -> "CompileCache | None":
         """Accept a CompileCache, a directory path, or ``None``."""
@@ -120,7 +135,7 @@ class CompileCache:
         ``jax.jit(fn)`` at those shapes."""
         key = self.key(kind, parts, args)
         if key in self._mem:
-            self.hits += 1
+            self._tally("hits")
             return self._mem[key], True
         path = self._path(key)
         if os.path.exists(path):
@@ -132,13 +147,13 @@ class CompileCache:
                 from jax.experimental import serialize_executable as se
                 compiled = se.deserialize_and_load(payload, in_tree,
                                                    out_tree)
-                self.hits += 1
+                self._tally("hits")
                 self._mem[key] = compiled
                 return compiled, True
             except KeyboardInterrupt:
                 raise
             except Exception as e:          # corrupt entry: warn + rebuild
-                self.corrupt += 1
+                self._tally("corrupt")
                 warnings.warn(
                     f"corrupt compile-cache entry {key[:12]} "
                     f"({type(e).__name__}: {e}); recompiling",
@@ -148,10 +163,10 @@ class CompileCache:
                 except OSError:
                     pass
         compiled = jax.jit(fn).lower(*_abstract(args)).compile()
-        self.misses += 1
+        self._tally("misses")
         self._mem[key] = compiled
         if not self._portable(compiled):
-            self.unportable += 1
+            self._tally("unportable")
             return compiled, False
         try:
             from jax.experimental import serialize_executable as se

@@ -153,12 +153,16 @@ def load_calibration(path: str | None = None) -> CostCalibration | None:
         return None
 
 
-def _best_of(fn, reps: int = 3) -> float:
+def _best_of(thunk, reps: int = 3) -> float:
+    """Best wall time of ``thunk()`` over ``reps`` runs.  The thunk owns
+    device synchronisation — callers pass closures that end in
+    ``jax.block_until_ready`` so the delta measures compute, not
+    dispatch."""
     import time
     best = math.inf
     for _ in range(reps):
         t0 = time.perf_counter()
-        fn()
+        thunk()
         best = min(best, time.perf_counter() - t0)
     return best
 

@@ -71,6 +71,9 @@ import numpy as np
 from repro.core.batched import (BucketSpec, eval_single, quantize_single_deq,
                                 requeue_spec)
 from repro.core.optq import cholesky_factor_finite
+from repro.obs import metrics as obs_metrics
+from repro.obs import names as obs_names
+from repro.obs import trace as obs_trace
 from repro.core.quantizer import (dequantize_int, dequantize_nf4,
                                   quantize_int, quantize_nf4, unpack_codes)
 
@@ -128,9 +131,12 @@ class HealthReport:
     def record(self, path: str, expert: int | None, status: str, *,
                ladder: tuple | list = (), diagnosis: dict | None = None,
                detail: str = "") -> None:
-        self.records[self.site_key(path, expert)] = {
+        site = self.site_key(path, expert)
+        self.records[site] = {
             "status": status, "ladder": list(ladder),
             "diagnosis": diagnosis, "detail": detail}
+        obs_metrics.counter(obs_names.HEALTH_PREFIX + status).inc()
+        obs_trace.instant("health." + status, site=site)
 
     def fallbacks(self) -> dict[str, dict]:
         """Sites that did NOT come out of the primary fused path clean."""
@@ -319,6 +325,17 @@ def heal_task(W, H, key, spec: BucketSpec, policy: HealthPolicy,
     engines — the ladder runs through the same
     :func:`~repro.core.batched.quantize_single_deq` core unsharded, i.e.
     the sequential oracle."""
+    with obs_trace.span("health.heal",
+                        site=HealthReport.site_key(path, expert),
+                        method=spec.method) as sp:
+        out = _heal_ladder(W, H, key, spec, policy, report, path, expert)
+        sp.set(healed=out is not None)
+        return out
+
+
+def _heal_ladder(W, H, key, spec: BucketSpec, policy: HealthPolicy,
+                 report: HealthReport, path: str,
+                 expert: int | None = None) -> dict | None:
     if not np.isfinite(np.asarray(W)).all():
         raise FloatingPointError(
             f"weight at {HealthReport.site_key(path, expert)} contains "

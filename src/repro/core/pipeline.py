@@ -83,6 +83,9 @@ from repro.core.optq import optq_quantize
 from repro.core.quantizer import (QuantConfig, dequantize_int, pack_codes,
                                   quantize_int, unpack_codes)
 from repro.models.modules import QSpec
+from repro.obs import metrics as obs_metrics
+from repro.obs import names as obs_names
+from repro.obs import trace as obs_trace
 from repro.models.transformer import ModelConfig, forward
 from repro.utils import GramStore, capture_grams, get_path, set_path, tree_paths
 
@@ -168,6 +171,7 @@ def run_calibration(params: dict, cfg: ModelConfig, batches: Iterable[dict],
         n_in += 1
         batch = faults.corrupt_batch(i, batch)        # calib_nan/calib_drop
         if batch is faults.DROPPED:
+            obs_metrics.counter(obs_names.CALIB_BATCHES_SKIPPED).inc()
             if report is not None:
                 report.event(f"calibration batch {i} dropped")
             continue
@@ -176,6 +180,7 @@ def run_calibration(params: dict, cfg: ModelConfig, batches: Iterable[dict],
             forward(params, eager_cfg, batch)
         faults.poison_grams(i, scratch)               # calib_nan (post)
         if not scratch.all_finite():
+            obs_metrics.counter(obs_names.CALIB_BATCHES_SKIPPED).inc()
             msg = (f"calibration batch {i} produced non-finite activations"
                    " — batch skipped")
             warnings.warn(msg, RuntimeWarning, stacklevel=2)
@@ -184,6 +189,7 @@ def run_calibration(params: dict, cfg: ModelConfig, batches: Iterable[dict],
             continue
         store.merge(scratch)
         n_used += 1
+        obs_metrics.counter(obs_names.CALIB_BATCHES_USED).inc()
     if n_in and not n_used:
         raise RuntimeError(
             f"calibration produced a zero-sample GramStore: all {n_in} "
@@ -325,6 +331,7 @@ def _quantize_model_sequential(eparams: dict, store: GramStore,
         spec = make_spec(W.shape[0], W.shape[1], site.qspec, site.method,
                          H is not None)
         report.checked += 1
+        obs_metrics.counter(obs_names.HEALTH_CHECKED).inc()
         if health.check_single(W, leaves, spec, policy):
             return leaves
         return health.heal_task(W, H, sub, spec, policy, report, path,
@@ -673,14 +680,20 @@ def quantize_model(params: dict, cfg: ModelConfig, calib_batches: list[dict],
     eparams = to_eager_params(params, cfg)
     sites = recipe.resolve(quantizable_linear_paths(eparams))
     _check_scan_uniform(sites, cfg)
-    store = run_calibration(eparams, cfg, calib_batches, report=report)
+    with obs_trace.span("quant.calibrate", batches=len(calib_batches)):
+        # grams land host-side (device_get in GramStore.add): no fence
+        store = run_calibration(eparams, cfg, calib_batches,
+                                report=report)
     new_params = jax.tree.map(lambda a: a, eparams)   # structural copy
     extra = ({"cost_model": cost_model, "compile_cache": compile_cache}
              if engine == "batched" else {})
-    _ENGINES[engine](eparams, store, sites, seed, cfg, new_params,
-                     progress, mesh, shard_axis, policy=policy,
-                     report=report, journal=journal,
-                     should_stop=should_stop, **extra)
+    with obs_trace.span("quant.model", engine=engine,
+                        sites=len(sites)) as sp:
+        _ENGINES[engine](eparams, store, sites, seed, cfg, new_params,
+                         progress, mesh, shard_axis, policy=policy,
+                         report=report, journal=journal,
+                         should_stop=should_stop, **extra)
+        sp.sync(new_params)
     if journal_dir is not None:
         report.save(os.path.join(journal_dir, "health.json"))
     new_cfg = dataclasses.replace(cfg, quant=recipe.qspec)

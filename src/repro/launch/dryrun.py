@@ -386,21 +386,44 @@ def main(argv=None) -> int:
                         "the output JSON")
     p.add_argument("--tag", default="", help="suffix for the output file")
     p.add_argument("--out", default="results/dryrun")
+    p.add_argument("--trace-out", default="", metavar="FILE",
+                   help="write a chrome-trace/Perfetto span timeline of "
+                        "the abstract lowering to FILE")
+    p.add_argument("--metrics-out", default="", metavar="FILE",
+                   help="write the metrics-registry snapshot to FILE "
+                        "(defaults to results/metrics-dryrun.json when "
+                        "--trace-out is set)")
     args = p.parse_args(argv)
+
+    from repro import obs
+    metrics_out = args.metrics_out or (
+        obs.default_metrics_path("dryrun") if args.trace_out else "")
+    with obs.session(args.trace_out or None, metrics_out or None):
+        return _run(args)
+
+
+def _run(args) -> int:
+    from repro.obs import trace as obs_trace
 
     if args.sweep:
         archs = [args.arch] if args.arch else None
         cells = [args.cell] if args.cell else None
         return 1 if sweep(args.out, args.bits, archs, cells) else 0
 
-    res = lower_cell(args.arch, args.cell, multi_pod=args.multi_pod,
-                     bits=args.bits, depth=args.depth, unroll=args.unroll,
-                     remat=args.remat, loss_chunk=args.loss_chunk,
-                     attn_chunk=args.attn_chunk, seq_shard=args.seq_shard,
-                     dp_only=args.dp_only, prefill_last=args.prefill_last,
-                     microbatch=args.microbatch, ssm_chunk=args.ssm_chunk,
-                     kv8=args.kv8, recipe_path=args.recipe or None,
-                     budget_mb=args.budget_mb)
+    with obs_trace.span("dryrun.lower", arch=str(args.arch),
+                        cell=str(args.cell)):
+        res = lower_cell(args.arch, args.cell, multi_pod=args.multi_pod,
+                         bits=args.bits, depth=args.depth,
+                         unroll=args.unroll,
+                         remat=args.remat, loss_chunk=args.loss_chunk,
+                         attn_chunk=args.attn_chunk,
+                         seq_shard=args.seq_shard,
+                         dp_only=args.dp_only,
+                         prefill_last=args.prefill_last,
+                         microbatch=args.microbatch,
+                         ssm_chunk=args.ssm_chunk,
+                         kv8=args.kv8, recipe_path=args.recipe or None,
+                         budget_mb=args.budget_mb)
     os.makedirs(args.out, exist_ok=True)
     tag = f"{args.arch}.{args.cell}.{'multi' if args.multi_pod else 'single'}"
     if args.depth:

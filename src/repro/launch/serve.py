@@ -22,7 +22,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config, get_smoke_config
+from repro.obs import log as obs_log
+from repro.obs import metrics as obs_metrics
+from repro.obs import names as obs_names
 from repro.core.pipeline import quantize_model
 from repro.core.recipe import QuantRecipe, load_plan
 from repro.data import DataConfig, TokenStream
@@ -88,18 +92,26 @@ def _serve_multitenant(args, cfg, params) -> int:
     rids = [engine.submit([int(rng.integers(1, cfg.vocab))],
                           tenants[i % len(tenants)], args.max_new)
             for i in range(args.requests)]
-    out = engine.run()
+    engine.run()
     dt = time.time() - t0
-    toks = sum(len(v) for v in out.values())
-    done = sum(1 for r in rids if engine.result(r))
+    # summary derived from the metrics registry, not recounted by hand:
+    # the engine increments serve.* as it admits/decodes/retires
+    reg = obs_metrics.get_registry()
+    toks = reg.counter(obs_names.SERVE_TOKENS).value
+    done = reg.counter(obs_names.SERVE_FINISHED).value
+    steps = reg.counter(obs_names.SERVE_STEPS).value
     lats = sorted(engine.latency(r) for r in rids)
     p50 = lats[len(lats) // 2]
-    print(f"[serve] {done}/{args.requests} requests, {engine.steps} steps, "
-          f"{toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s), "
-          f"{len(tenants)} tenants, rank buckets {registry.ranks()}, "
-          f"p50 latency {p50 * 1e3:.0f}ms")
+    obs_log.info("serve", requests=f"{done}/{args.requests}",
+                 steps=steps, tokens=toks, s=dt, tok_s=toks / dt,
+                 tenants=len(tenants),
+                 rank_buckets=",".join(map(str, registry.ranks())),
+                 p50_ms=p50 * 1e3)
     if engine.compile_cache is not None:
-        print(f"[serve] decode {engine.compile_cache.summary()}")
+        obs_log.info("serve", "decode",
+                     cache_hits=reg.counter(obs_names.CACHE_HITS).value,
+                     cache_misses=reg.counter(
+                         obs_names.CACHE_MISSES).value)
     return 0
 
 
@@ -142,8 +154,8 @@ def _serve_legacy(args, cfg, params) -> int:
             break
     dt = time.time() - t0
     toks = steps * B
-    print(f"[serve] {done}/{args.requests} requests, {steps} steps, "
-          f"{toks} slot-tokens in {dt:.2f}s ({toks / dt:.1f} tok/s)")
+    obs_log.info("serve", requests=f"{done}/{args.requests}", steps=steps,
+                 slot_tokens=toks, s=dt, tok_s=toks / dt)
     return 0
 
 
@@ -182,17 +194,29 @@ def main(argv=None) -> int:
                    help="cost-model calibration JSON (repro.core.costmodel "
                         "calibrate output) driving the bucket planner's "
                         "sharded/replicated/sequential choice")
+    p.add_argument("--trace-out", default="", metavar="FILE",
+                   help="write a chrome-trace/Perfetto span timeline "
+                        "(quantize buckets + serve steps/decodes) to FILE; "
+                        "REPRO_TRACE_SYNC=1 fences async dispatch")
+    p.add_argument("--metrics-out", default="", metavar="FILE",
+                   help="write the metrics-registry snapshot to FILE "
+                        "(defaults to results/metrics-serve.json when "
+                        "--trace-out is set)")
     args = p.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    params = init_params(jax.random.PRNGKey(args.seed), cfg)
-    cfg, params = _build_quantized(args, cfg, params)
+    metrics_out = args.metrics_out or (
+        obs.default_metrics_path("serve") if args.trace_out else "")
+    with obs.session(args.trace_out or None, metrics_out or None):
+        cfg = (get_smoke_config(args.arch) if args.smoke
+               else get_config(args.arch))
+        params = init_params(jax.random.PRNGKey(args.seed), cfg)
+        cfg, params = _build_quantized(args, cfg, params)
 
-    if cfg.family in ("dense", "moe") and cfg.scan_layers:
-        rc = _serve_multitenant(args, cfg, params)
-        if rc >= 0:
-            return rc
-    return _serve_legacy(args, cfg, params)
+        if cfg.family in ("dense", "moe") and cfg.scan_layers:
+            rc = _serve_multitenant(args, cfg, params)
+            if rc >= 0:
+                return rc
+        return _serve_legacy(args, cfg, params)
 
 
 if __name__ == "__main__":

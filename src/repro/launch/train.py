@@ -27,7 +27,12 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
+from repro.obs import log as obs_log
+from repro.obs import metrics as obs_metrics
+from repro.obs import names as obs_names
+from repro.obs import trace as obs_trace
 from repro.configs import get_config, get_smoke_config
 from repro.core.pipeline import (allocate_plan, quantization_manifest,
                                  quantize_model)
@@ -94,11 +99,27 @@ def parse_args(argv=None):
                         "host once and cache the result "
                         "(repro.core.costmodel.calibrate)")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--trace-out", default="", metavar="FILE",
+                   help="write a chrome-trace/Perfetto span timeline of "
+                        "the run to FILE (load at https://ui.perfetto.dev; "
+                        "REPRO_TRACE_SYNC=1 fences async dispatch at span "
+                        "close)")
+    p.add_argument("--metrics-out", default="", metavar="FILE",
+                   help="write the metrics-registry snapshot to FILE "
+                        "(defaults to results/metrics-train.json when "
+                        "--trace-out is set)")
     return p.parse_args(argv)
 
 
 def main(argv=None) -> int:
     args = parse_args(argv)
+    metrics_out = args.metrics_out or (
+        obs.default_metrics_path("train") if args.trace_out else "")
+    with obs.session(args.trace_out or None, metrics_out or None):
+        return _run(args)
+
+
+def _run(args) -> int:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.smoke and args.group_size > cfg.d_model:
         args.group_size = min(args.group_size, 16)
@@ -122,8 +143,8 @@ def main(argv=None) -> int:
         for _ in range(args.pretrain_steps):
             st0, m0 = fn0(st0, stream.next_batch())
         params = merge_params(st0["train"], st0["frozen"])
-        print(f"[pretrain] {args.pretrain_steps} steps, "
-              f"loss={float(m0['loss']):.4f}")
+        obs_log.info("pretrain", steps=args.pretrain_steps,
+                     loss=float(m0["loss"]))
 
     if args.auto_allocate and args.recipe:
         raise SystemExit("--auto-allocate derives the recipe; it conflicts "
@@ -155,7 +176,7 @@ def main(argv=None) -> int:
                               int(args.budget_mb * 2**20),
                               grid=default_grid(methods=(args.method,)),
                               qspec=base)
-        print(f"[allocate] solved in {time.time() - t0:.1f}s")
+        obs_log.info("allocate", "solved", s=time.time() - t0)
         print(alloc.summary())
         recipe = alloc.recipe
     # handlers installed BEFORE quantization: a SIGTERM mid-quantization
@@ -191,14 +212,16 @@ def main(argv=None) -> int:
                 compile_cache=args.compile_cache or None,
                 should_stop=(lambda: stop["flag"]) if journal_dir else None)
         except QuantPreempted as e:
-            print(f"[preempt-quant] signal received — buckets 0..{e.bucket} "
-                  f"committed to {journal_dir}; rerun with the same "
-                  "--resume-quant to continue")
+            obs_log.warn(
+                "preempt-quant",
+                f"signal received — buckets 0..{e.bucket} committed to "
+                f"{journal_dir}; rerun with the same --resume-quant to "
+                "continue")
             return 0
-        print(f"[quantize] {len(recipe.rules)} site rule(s), default "
-              f"{recipe.method}/{recipe.qspec.bits}b "
-              f"took {time.time() - t0:.1f}s")
-        print(f"[quantize] {report.summary()}")
+        obs_log.info("quantize", rules=len(recipe.rules),
+                     default=f"{recipe.method}/{recipe.qspec.bits}b",
+                     s=time.time() - t0)
+        obs_log.info("quantize", report.summary())
         # production checkpoints carry the bucket manifest (recipe
         # included) so restores on any mesh can rebuild per-leaf shardings
         # without the planner (checkpoint.manager.manifest_shardings)
@@ -226,29 +249,41 @@ def main(argv=None) -> int:
             state = rebuilt
             stream.load_state_dict(meta["data"])
             start_step = meta["step"]
-            print(f"[resume] step {start_step}")
+            obs_log.info("resume", f"step {start_step}")
 
+    step_hist = obs_metrics.histogram(obs_names.TRAIN_STEP_TIME)
+    step_count = obs_metrics.counter(obs_names.TRAIN_STEPS)
     times: list[float] = []
     for step in range(start_step, args.steps):
         t0 = time.time()
-        state, metrics = step_fn(state, stream.next_batch())
+        with obs_trace.span("train.step", step=step):
+            state, metrics = step_fn(state, stream.next_batch())
+            # fence the async dispatch: the step time below must measure
+            # device compute, not XLA enqueue (reprolint BENCH)
+            jax.block_until_ready(metrics)
         dt = time.time() - t0
+        step_hist.observe(dt)
+        step_count.inc()
         if len(times) >= 5:
             med = statistics.median(times[-50:])
             if dt > args.straggler_factor * med:
-                print(f"[straggler] step {step} took {dt:.3f}s "
-                      f"(median {med:.3f}s) — would requeue on cluster")
+                obs_log.warn(
+                    "straggler",
+                    f"step {step} took {dt:.3f}s (median {med:.3f}s) "
+                    "— would requeue on cluster")
         times.append(dt)
         if step % 10 == 0 or step == args.steps - 1:
-            print(f"step {step} loss={float(metrics['loss']):.4f} "
-                  f"lr={float(metrics['lr']):.2e} "
-                  f"gnorm={float(metrics['grad_norm']):.3f} ({dt * 1e3:.0f}ms)")
+            obs_log.info("step", i=step, loss=float(metrics["loss"]),
+                         lr=float(metrics["lr"]),
+                         gnorm=float(metrics["grad_norm"]),
+                         ms=dt * 1e3)
         if ckpt is not None:
             ckpt.maybe_save(step + 1, state,
                             {"data": stream.state_dict(), "step": step + 1},
                             manifest=manifest)
         if stop["flag"]:
-            print(f"[preempt] signal received — checkpointing at {step + 1}")
+            obs_log.warn("preempt",
+                         f"signal received — checkpointing at {step + 1}")
             if ckpt is not None:
                 # pinned: retention GC must never collect the preemption
                 # checkpoint, however many routine saves follow on restart
@@ -263,7 +298,7 @@ def main(argv=None) -> int:
                         {"data": stream.state_dict(), "step": args.steps},
                         force=True, manifest=manifest)
         ckpt.wait()
-    print("[done]", json.dumps({"final_loss": float(metrics["loss"])}))
+    obs_log.info("done", json.dumps({"final_loss": float(metrics["loss"])}))
     return 0
 
 

@@ -38,6 +38,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.parallel import LOCAL
+from repro.obs import metrics as obs_metrics
+from repro.obs import names as obs_names
+from repro.obs import trace as obs_trace
 from repro.models.transformer import decode_step
 from repro.serve.kv_cache import (PageAllocator, extract_token, gather_pages,
                                   init_pools, pages_needed, scatter_token)
@@ -59,6 +62,8 @@ class _Request:
     pos: int = 0                       # tokens fed so far
     out: list = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
+    t_admit: float = 0.0               # first appearance in the active map
+    t_first: float = 0.0               # first generated token
     t_finish: float = 0.0
 
     def next_token(self) -> int:
@@ -193,44 +198,82 @@ class ServeEngine:
         self._reqs[rid] = _Request(rid, tenant, rank, ad_slot, prompt,
                                    max_new, eos, t_submit=time.perf_counter())
         self.scheduler.submit(rid, rank, pages_needed(n_tok, self._page))
+        obs_metrics.counter(obs_names.SERVE_SUBMITTED).inc()
         return rid
 
     def step(self) -> list[int]:
         """One engine iteration; returns rids finished this step."""
-        active = self.scheduler.tick()
-        finished: list[int] = []
-        for rank in sorted(b for b, ent in active.items() if ent):
-            entries = active[rank]
-            stacks = self.registry.stacks(rank)
-            B = self.bucket_capacity
-            ad = np.zeros((B,), np.int32)
-            toks = np.zeros((B, 1), np.int32)
-            lens = np.zeros((B,), np.int32)
-            pt = np.zeros((B, self._maxp), np.int32)
-            for slot, rid in entries:
-                r = self._reqs[rid]
-                ad[slot] = r.ad_slot
-                toks[slot, 0] = r.next_token()
-                lens[slot] = r.pos
-                pages = self.scheduler.pages_of(rid)
-                pt[slot, :len(pages)] = pages
-            nxt, self._k_pool, self._v_pool = self._exec(
-                self._base, stacks, jnp.asarray(ad), self._k_pool,
-                self._v_pool, jnp.asarray(pt), jnp.asarray(lens),
-                jnp.asarray(toks))
-            nxt = np.asarray(nxt)
-            for slot, rid in entries:
-                r = self._reqs[rid]
-                r.pos += 1
-                if r.pos >= len(r.prompt):
-                    tok = int(nxt[slot])
-                    r.out.append(tok)
-                    if len(r.out) >= r.max_new or tok == r.eos:
-                        r.t_finish = time.perf_counter()
-                        self.scheduler.retire(rid)
-                        finished.append(rid)
-        self.steps += 1
+        with obs_trace.span("serve.step", step=self.steps) as step_sp:
+            active = self.scheduler.tick()
+            now = time.perf_counter()
+            queue_hist = obs_metrics.histogram(obs_names.SERVE_QUEUE_WAIT)
+            for entries in active.values():
+                for _slot, rid in entries:
+                    r = self._reqs[rid]
+                    if r.t_admit == 0.0:
+                        r.t_admit = now
+                        queue_hist.observe(now - r.t_submit)
+            finished: list[int] = []
+            for rank in sorted(b for b, ent in active.items() if ent):
+                entries = active[rank]
+                stacks = self.registry.stacks(rank)
+                B = self.bucket_capacity
+                ad = np.zeros((B,), np.int32)
+                toks = np.zeros((B, 1), np.int32)
+                lens = np.zeros((B,), np.int32)
+                pt = np.zeros((B, self._maxp), np.int32)
+                for slot, rid in entries:
+                    r = self._reqs[rid]
+                    ad[slot] = r.ad_slot
+                    toks[slot, 0] = r.next_token()
+                    lens[slot] = r.pos
+                    pages = self.scheduler.pages_of(rid)
+                    pt[slot, :len(pages)] = pages
+                with obs_trace.span("serve.decode", rank=rank,
+                                    batch=len(entries)):
+                    nxt, self._k_pool, self._v_pool = self._exec(
+                        self._base, stacks, jnp.asarray(ad), self._k_pool,
+                        self._v_pool, jnp.asarray(pt), jnp.asarray(lens),
+                        jnp.asarray(toks))
+                    nxt = np.asarray(nxt)    # host sync inside the span
+                for slot, rid in entries:
+                    r = self._reqs[rid]
+                    r.pos += 1
+                    if r.pos >= len(r.prompt):
+                        tok = int(nxt[slot])
+                        r.out.append(tok)
+                        obs_metrics.counter(obs_names.SERVE_TOKENS).inc()
+                        if len(r.out) == 1:
+                            r.t_first = time.perf_counter()
+                            obs_metrics.histogram(
+                                obs_names.SERVE_TTFT).observe(
+                                r.t_first - r.t_submit)
+                        if len(r.out) >= r.max_new or tok == r.eos:
+                            r.t_finish = time.perf_counter()
+                            self._retire_metrics(r)
+                            self.scheduler.retire(rid)
+                            finished.append(rid)
+            self._kv_metrics()
+            obs_metrics.counter(obs_names.SERVE_STEPS).inc()
+            self.steps += 1
+            step_sp.set(finished=len(finished))
         return finished
+
+    def _retire_metrics(self, r: _Request) -> None:
+        obs_metrics.counter(obs_names.SERVE_FINISHED).inc()
+        if len(r.out) > 1:
+            obs_metrics.histogram(
+                obs_names.SERVE_TOKEN_LATENCY).observe(
+                (r.t_finish - r.t_first) / (len(r.out) - 1))
+
+    def _kv_metrics(self) -> None:
+        alloc = self.scheduler.allocator
+        in_use = alloc.n_usable - alloc.n_free
+        obs_metrics.gauge(obs_names.SERVE_KV_PAGES_IN_USE).set(in_use)
+        obs_metrics.gauge(obs_names.SERVE_KV_PAGES_TOTAL).set(
+            alloc.n_usable)
+        obs_metrics.histogram(obs_names.SERVE_KV_OCCUPANCY).observe(
+            in_use / alloc.n_usable)
 
     def run(self, max_steps: int | None = None) -> dict[int, list[int]]:
         """Drive until every submitted request retires."""

@@ -35,6 +35,9 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import names as obs_names
+from repro.obs import trace as obs_trace
 from repro.serve.kv_cache import PageAllocator
 
 
@@ -102,6 +105,11 @@ class Scheduler:
             self._where[req.rid] = (req.bucket, slot)
             admitted.append(req.rid)
         self._queue = still
+        if admitted:
+            obs_metrics.counter(obs_names.SERVE_ADMITTED).inc(
+                len(admitted))
+            obs_trace.instant("serve.admit", step=self._step,
+                              n=len(admitted))
         active = {b: [(s, rid) for s, rid in enumerate(slots)
                       if rid is not None]
                   for b, slots in self._slots.items()}

@@ -107,7 +107,7 @@ def test_sharded_model_parity_moe():
         qp_b, _, _ = quantize_model(params, cfg, calib, qspec=qspec,
                                     engine="batched", mesh=mesh,
                                     progress=msgs.append)
-        assert any("sharded x2" in m for m in msgs), msgs
+        assert any("path=sharded shards=2" in m for m in msgs), msgs
         qp_s, _, _ = quantize_model(params, cfg, calib, qspec=qspec,
                                     engine="sequential")
         fb, fs = tree_paths(qp_b), tree_paths(qp_s)

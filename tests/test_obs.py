@@ -1,0 +1,362 @@
+"""The observability layer (repro.obs): spans, metrics, structured logs.
+
+What gets proven:
+
+* **disabled = free** — with the tracer off (the default), instrumented
+  code paths return the shared no-op span, quantization results are
+  bitwise identical to a traced run, and the per-callsite cost is
+  sub-microsecond-ish (generously bounded for shared-CI noise);
+* **spans round-trip** — nesting, attributes and error tagging survive
+  chrome-trace export (the file Perfetto loads), with parent intervals
+  enclosing child intervals;
+* **histograms** — le-edge semantics at the edges, overflow slot,
+  edge-list validation;
+* **determinism** — two identical runs (including fault-injected ones
+  that exercise the health ladder) produce identical counter snapshots,
+  and the health events show up as both counters and trace events;
+* **the name contract** — every emitted metric is declared in
+  repro.obs.names, whose registry matches the committed
+  tools/obs_metric_names.json.
+"""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import log as obs_log
+from repro.obs import metrics as obs_metrics
+from repro.obs import names as obs_names
+from repro.obs import trace as obs_trace
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    """Every test starts with the module tracer off and a clean slate."""
+    obs_trace.disable()
+    obs_trace.get_tracer().clear()
+    obs_metrics.reset()
+    yield
+    obs_trace.disable()
+    obs_trace.get_tracer().clear()
+    obs_metrics.reset()
+
+
+def _tasks(n_layers=3, m=32, n=32, seed=0):
+    from repro.core.batched import LayerTask
+    rng = np.random.default_rng(seed)
+    keys = jax.random.split(jax.random.PRNGKey(0), n_layers)
+    tasks = []
+    for i in range(n_layers):
+        W = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        X = rng.normal(size=(128, m)).astype(np.float32)
+        tasks.append(LayerTask(f"l{i}", None, W, jnp.asarray(X.T @ X),
+                               keys[i]))
+    return tasks
+
+
+# --- disabled tracer is a no-op --------------------------------------------
+
+
+def test_disabled_span_is_shared_singleton():
+    assert not obs_trace.is_enabled()
+    s1 = obs_trace.span("a", x=1)
+    s2 = obs_trace.span("b")
+    assert s1 is s2
+    with s1 as sp:
+        assert sp.set(anything=True) is sp
+        tree = {"x": 1}
+        assert sp.sync(tree) is tree
+    assert obs_trace.get_tracer().events() == []
+
+
+def test_disabled_tracer_results_bitwise_identical():
+    """Tracing (with sync fencing, the invasive mode) must not perturb
+    quantization numerics in any way."""
+    from repro.core.batched import quantize_layer_batch
+    from repro.models.modules import QSpec
+
+    qspec = QSpec(bits=4, group_size=16, rank=4)
+    off = quantize_layer_batch(_tasks(), qspec, "cloq")
+    obs_trace.enable(sync=True)
+    on = quantize_layer_batch(_tasks(), qspec, "cloq")
+    obs_trace.disable()
+    assert len(off) == len(on)
+    for o, t in zip(off, on):
+        assert set(o) == set(t)
+        for k in o:
+            np.testing.assert_array_equal(np.asarray(o[k]),
+                                          np.asarray(t[k]), err_msg=k)
+    # and the traced run actually recorded the engine spans
+    names = {e["name"] for e in obs_trace.get_tracer().events()}
+    assert "quant.plan" in names and "bucket.execute" in names
+
+
+def test_disabled_span_overhead_near_zero():
+    """The price of an instrumented callsite with tracing off: one call
+    + one bool check.  Bounded generously for noisy shared hosts — the
+    point is catching an accidental allocation/lock on the fast path,
+    not microbenchmark precision."""
+    reps = 50_000
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        with obs_trace.span("noop", a=1):
+            pass
+    per_call = (time.perf_counter() - t0) / reps
+    assert per_call < 20e-6, f"disabled span costs {per_call * 1e9:.0f}ns"
+
+
+# --- span recording + chrome-trace export ----------------------------------
+
+
+def test_span_nesting_attrs_roundtrip(tmp_path):
+    tr = obs_trace.Tracer()
+    tr.enabled = True
+    with tr.span("outer", bucket=0) as outer:
+        with tr.span("inner", layers=3) as inner:
+            inner.set(path="replicated")
+        outer.set(ok=True)
+    tr.instant("marker", note="here")
+    out = tmp_path / "trace.json"
+    tr.export(out)
+
+    payload = json.loads(out.read_text())
+    assert sorted(payload) == ["displayTimeUnit", "traceEvents"]
+    evs = payload["traceEvents"]
+    by_name = {e["name"]: e for e in evs}
+    # process metadata for Perfetto's track naming
+    assert by_name["process_name"]["ph"] == "M"
+    inner, outer = by_name["inner"], by_name["outer"]
+    assert inner["ph"] == outer["ph"] == "X"
+    assert inner["args"] == {"layers": 3, "path": "replicated"}
+    assert outer["args"] == {"bucket": 0, "ok": True}
+    # the parent interval encloses the child interval
+    assert outer["ts"] <= inner["ts"]
+    assert (inner["ts"] + inner["dur"]) <= (outer["ts"] + outer["dur"]
+                                            + 1e-3)
+    assert by_name["marker"]["ph"] == "i"
+    # every event carries the common chrome-trace keys
+    for e in evs:
+        assert {"name", "ph", "pid", "tid"} <= set(e)
+
+
+def test_span_records_error_attr():
+    tr = obs_trace.Tracer()
+    tr.enabled = True
+    with pytest.raises(ValueError):
+        with tr.span("will_fail"):
+            raise ValueError("boom")
+    (ev,) = tr.events()
+    assert ev["args"]["error"] == "ValueError"
+
+
+def test_traced_decorator():
+    tr = obs_trace.get_tracer()
+    calls = []
+
+    @obs_trace.traced("my.step", kind="test")
+    def fn(x):
+        calls.append(x)
+        return x * 2
+
+    assert fn(3) == 6                        # disabled: plain call
+    assert tr.events() == []
+    obs_trace.enable(sync=False)
+    assert fn(4) == 8
+    obs_trace.disable()
+    (ev,) = tr.events()
+    assert ev["name"] == "my.step" and ev["args"] == {"kind": "test"}
+    assert calls == [3, 4]
+
+
+def test_sync_fence_registers_only_when_enabled():
+    tr = obs_trace.Tracer(sync_fence=True)
+    tr.enabled = True
+    x = jnp.arange(4.0)
+    with tr.span("fenced") as sp:
+        assert sp.sync(x) is x
+        assert sp._pending is not None
+    assert sp._pending is None               # consumed at close
+    tr2 = obs_trace.Tracer(sync_fence=False)
+    tr2.enabled = True
+    with tr2.span("unfenced") as sp2:
+        sp2.sync(x)
+        assert sp2._pending is None
+
+
+# --- metrics ----------------------------------------------------------------
+
+
+def test_histogram_edge_semantics():
+    reg = obs_metrics.MetricsRegistry()
+    h = reg.histogram("lat", edges=(0.1, 1.0, 10.0))
+    for x in (0.05, 0.1, 0.100001, 1.0, 10.0, 10.1, 1e9):
+        h.observe(x)
+    # le edges: x == edge lands in that edge's bucket
+    assert h.counts == [2, 2, 1, 2]
+    assert h.count == 7
+    snap = reg.snapshot()["histograms"]["lat"]
+    assert snap["counts"] == [2, 2, 1, 2]
+    assert snap["edges"] == [0.1, 1.0, 10.0]
+
+
+def test_histogram_rejects_bad_edges():
+    reg = obs_metrics.MetricsRegistry()
+    for bad in ((), (1.0, 1.0), (2.0, 1.0)):
+        with pytest.raises(ValueError):
+            reg.histogram(f"bad{len(bad)}", edges=bad)
+    with pytest.raises(ValueError):
+        reg.histogram("undeclared.name")     # no edges, not in names.py
+
+
+def test_snapshot_sorted_and_deterministic(tmp_path):
+    def emit(reg):
+        reg.counter("z.last").inc(2)
+        reg.counter("a.first").inc()
+        reg.gauge("mid").set(0.5)
+        reg.histogram("h", edges=(1.0,)).observe(0.2)
+
+    r1, r2 = obs_metrics.MetricsRegistry(), obs_metrics.MetricsRegistry()
+    emit(r1)
+    emit(r2)
+    assert r1.snapshot() == r2.snapshot()
+    assert list(r1.snapshot()["counters"]) == ["a.first", "z.last"]
+    p = tmp_path / "m.json"
+    r1.save(p)
+    assert json.loads(p.read_text()) == r1.snapshot()
+
+
+# --- fault-injected runs: counters + spans together -------------------------
+
+
+def _quant_once():
+    from repro.core import faults
+    from repro.core.health import HealthReport
+    from repro.core.pipeline import quantize_model
+    from repro.core.recipe import QuantRecipe
+    from repro.data import DataConfig, TokenStream
+    from repro.models.modules import QSpec
+    from repro.models.transformer import ModelConfig, init_params
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      vocab=128, n_heads=4, n_kv_heads=2, d_ff=64,
+                      dtype=jnp.float32, scan_layers=False)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    stream = TokenStream(DataConfig(vocab=128, seq_len=32, global_batch=2))
+    calib = [stream.next_batch() for _ in range(2)]
+    recipe = QuantRecipe.single(
+        "cloq", QSpec(bits=4, group_size=16, rank=4, method="cloq"))
+    report = HealthReport()
+    with faults.inject("gram_nan", match="blocks.0.attn.q"):
+        quantize_model(params, cfg, calib, recipe=recipe,
+                       engine="batched", report=report)
+    return report
+
+
+@pytest.mark.fault
+def test_fault_run_counters_deterministic_and_health_visible():
+    obs_trace.enable(sync=False)
+    _quant_once()
+    obs_trace.disable()
+    first = obs_metrics.snapshot()
+    events = obs_trace.get_tracer().events()
+
+    obs_metrics.reset()
+    obs_trace.get_tracer().clear()
+    _quant_once()                            # tracer off this time
+    second = obs_metrics.snapshot()
+
+    # identical event streams -> identical counters, traced or not
+    assert first["counters"] == second["counters"]
+    # the injected NaN gram walked the ladder: counted AND traced
+    c = first["counters"]
+    assert c[obs_names.HEALTH_PREFIX + "recovered_identity_gram"] >= 1
+    assert c[obs_names.HEALTH_CHECKED] >= 1
+    assert c[obs_names.QUANT_BUCKETS] >= 1
+    names = [e["name"] for e in events]
+    assert "health.heal" in names
+    assert "health.recovered_identity_gram" in names
+    assert "quant.model" in names and "quant.calibrate" in names
+
+
+# --- the committed name contract -------------------------------------------
+
+
+def test_registry_matches_committed_json():
+    committed = json.loads(
+        open(os.path.join(REPO, "tools", "obs_metric_names.json")).read())
+    committed.pop("comment", None)
+    live = obs_names.registry_dict()
+    assert committed == json.loads(json.dumps(live)), (
+        "repro.obs.names drifted from tools/obs_metric_names.json — "
+        "run: python tools/check_obs.py --update-registry")
+
+
+def test_emitted_serve_metrics_are_declared():
+    """Everything the serve engine emits must be a declared name (the
+    check_obs snapshot validation relies on it)."""
+    for n in (obs_names.SERVE_SUBMITTED, obs_names.SERVE_ADMITTED,
+              obs_names.SERVE_FINISHED, obs_names.SERVE_TOKENS,
+              obs_names.SERVE_STEPS):
+        assert n in obs_names.COUNTERS
+    for n in (obs_names.SERVE_TTFT, obs_names.SERVE_TOKEN_LATENCY,
+              obs_names.SERVE_QUEUE_WAIT, obs_names.SERVE_KV_OCCUPANCY):
+        assert n in obs_names.HISTOGRAMS
+    assert obs_names.SERVE_KV_PAGES_IN_USE in obs_names.GAUGES
+
+
+# --- structured log lines ---------------------------------------------------
+
+
+def test_log_format_event():
+    line = obs_log.format_event("bucket", i=3, spec="cloq/4b/g16/r8",
+                                s=0.123456)
+    assert line == "[bucket] i=3 spec=cloq/4b/g16/r8 s=0.1235"
+    assert obs_log.format_event("done", "all good") == "[done] all good"
+
+
+def test_log_sink_swap_and_level():
+    got = []
+    obs_log.set_sink(got.append)
+    try:
+        obs_log.set_level("warn")
+        obs_log.info("quiet", x=1)
+        obs_log.warn("loud", x=2)
+        assert got == ["[loud] x=2"]
+    finally:
+        obs_log.set_sink(None)
+        obs_log.set_level("info")
+
+
+# --- session wiring ---------------------------------------------------------
+
+
+def test_session_exports_trace_and_metrics(tmp_path):
+    from repro import obs
+    tpath, mpath = tmp_path / "t.json", tmp_path / "m.json"
+    with obs.session(tpath, mpath, sync=False):
+        assert obs_trace.is_enabled()
+        with obs_trace.span("work", step=1):
+            obs_metrics.counter(obs_names.TRAIN_STEPS).inc()
+    assert not obs_trace.is_enabled()
+    trace = json.loads(tpath.read_text())
+    assert any(e["name"] == "work" for e in trace["traceEvents"])
+    snap = json.loads(mpath.read_text())
+    assert snap["counters"][obs_names.TRAIN_STEPS] == 1
+
+
+def test_session_exports_on_exception(tmp_path):
+    from repro import obs
+    tpath = tmp_path / "t.json"
+    with pytest.raises(RuntimeError):
+        with obs.session(tpath, None, sync=False):
+            with obs_trace.span("doomed"):
+                pass
+            raise RuntimeError("crash")
+    assert any(e["name"] == "doomed"
+               for e in json.loads(tpath.read_text())["traceEvents"])

@@ -392,14 +392,14 @@ def test_bucket_cache_counters_in_progress_line(tmp_path):
     c1 = CompileCache(str(tmp_path))
     out1 = quantize_layer_batch(tasks, qspec, "rtn", progress=msgs1.append,
                                 compile_cache=c1)
-    assert any("cache miss" in m for m in msgs1), msgs1
+    assert any("cache=miss" in m for m in msgs1), msgs1
     assert c1.misses == 1
 
     msgs2: list[str] = []
     c2 = CompileCache(str(tmp_path))
     out2 = quantize_layer_batch(tasks, qspec, "rtn", progress=msgs2.append,
                                 compile_cache=c2)
-    assert any("cache hit" in m for m in msgs2), msgs2
+    assert any("cache=hit" in m for m in msgs2), msgs2
     assert c2.hits == 1 and c2.misses == 0
     for a, b in zip(out1, out2):
         for k in a:

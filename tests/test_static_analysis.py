@@ -3,8 +3,8 @@
 Three layers:
 
 * **rule engine** — one known-violation / known-clean fixture pair per
-  rule (RETRACE, COLLECTIVE, DTYPE, PRNG, PURITY), pragma suppression,
-  and the baseline round-trip;
+  rule (RETRACE, COLLECTIVE, DTYPE, PRNG, PURITY, BENCH), pragma
+  suppression, and the baseline round-trip;
 * **shape fleet** — entries build deterministically, the committed
   goldens match, and a mutated config field (the drift the fleet exists
   to catch) produces a non-empty field-level diff;
@@ -103,6 +103,26 @@ def f(x):
     return x * 2
 """,
     ),
+    "BENCH": (
+        """
+import time
+import jax
+f = jax.jit(lambda v: v + 1)
+def bench(x):
+    t0 = time.perf_counter()
+    y = f(x)
+    return time.perf_counter() - t0
+""",
+        """
+import time
+import jax
+f = jax.jit(lambda v: v + 1)
+def bench(x):
+    t0 = time.perf_counter()
+    y = jax.block_until_ready(f(x))
+    return time.perf_counter() - t0
+""",
+    ),
 }
 
 
@@ -193,6 +213,56 @@ def init(key):
     return a, b
 """
     assert analysis.lint_source(src, "resplit.py") == []
+
+
+def test_bench_shapes():
+    # timing plain Python is fine
+    src = """
+import time
+def cost(f, x):
+    t0 = time.perf_counter()
+    f(x)
+    return time.perf_counter() - t0
+"""
+    assert analysis.lint_source(src, "plain.py") == []
+    # inline jax.jit(f)(x) inside the timed region is flagged
+    src = """
+import time
+import jax
+def bench(f, x):
+    t0 = time.time()
+    y = jax.jit(f)(x)
+    dt = time.time() - t0
+    return dt
+"""
+    assert any(f.rule == "BENCH"
+               for f in analysis.lint_source(src, "inline.py"))
+    # method-form sync on the result clears it
+    src = """
+import time
+import jax
+def bench(f, x):
+    t0 = time.time()
+    y = jax.jit(f)(x)
+    y.block_until_ready()
+    dt = time.time() - t0
+    return dt
+"""
+    assert analysis.lint_source(src, "method.py") == []
+    # a jit-decorated def called inside the region is flagged
+    src = """
+import time
+import jax
+@jax.jit
+def step(x):
+    return x * 2
+def bench(x):
+    t0 = time.monotonic()
+    step(x)
+    return time.monotonic() - t0
+"""
+    assert any(f.rule == "BENCH"
+               for f in analysis.lint_source(src, "deco.py"))
 
 
 def test_pragma_suppression():

@@ -36,7 +36,9 @@ DOCTEST_MODULES = ["repro.core.batched", "repro.core.allocate",
                    "repro.core.costmodel", "repro.core.compile_cache",
                    "repro.serve", "repro.serve.kv_cache",
                    "repro.serve.scheduler",
-                   "repro.analysis", "repro.analysis.engine"]
+                   "repro.analysis", "repro.analysis.engine",
+                   "repro.obs", "repro.obs.metrics", "repro.obs.trace",
+                   "repro.obs.log"]
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

@@ -1,0 +1,222 @@
+#!/usr/bin/env python
+"""Observability-contract checker: metric names, snapshots, traces.
+
+Three checks over the ``repro.obs`` layer:
+
+* **metric-name registry** — ``repro.obs.names.registry_dict()`` must
+  match the committed mirror ``tools/obs_metric_names.json``; renaming
+  or adding a metric without regenerating the mirror
+  (``--update-registry``) fails, so downstream consumers of
+  ``results/metrics-*.json`` never silently break;
+* **metrics snapshots** — every ``results/metrics-*.json`` must be a
+  structurally valid registry snapshot (counters/gauges/histograms with
+  the right value shapes) whose metric names are all declared in the
+  registry — an unknown or renamed metric in a snapshot is a failure;
+* **traces** — every ``results/trace-*.json`` must be loadable
+  chrome-trace JSON (``traceEvents`` list; events carry
+  name/ph/pid/tid/ts; ``ph`` in the emitted set; complete events carry
+  a non-negative ``dur``), i.e. something Perfetto will open.
+
+Missing artifacts are reported as skipped (benchmark/launch runs
+regenerate them on demand); present-but-invalid ones fail.  Wired into
+the verify skill (`.claude/skills/verify/SKILL.md`):
+
+    PYTHONPATH=src python tools/check_obs.py
+
+Exit codes follow :mod:`tools.checklib`: 0 clean, 1 contract
+violation, 2 usage error.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+sys.path.insert(0, str(REPO / "src"))
+
+from tools import checklib  # noqa: E402
+
+RESULTS = REPO / "results"
+REGISTRY_JSON = REPO / "tools" / "obs_metric_names.json"
+
+_PHASES = {"X", "M", "B", "E", "i", "C"}
+_EVENT_KEYS = {"name", "ph", "pid"}
+_TIMED_KEYS = {"tid", "ts"}              # metadata ("M") events carry none
+
+
+def _load_registry() -> dict:
+    from repro.obs import names
+    return names.registry_dict()
+
+
+def check_registry_sync() -> checklib.CheckResult:
+    """names.py <-> committed obs_metric_names.json diff."""
+    name = "metric-registry"
+    live = _load_registry()
+    if not REGISTRY_JSON.exists():
+        return checklib.CheckResult(
+            name, errors=[f"{REGISTRY_JSON.name} missing — run "
+                          "check_obs.py --update-registry"])
+    committed = json.loads(REGISTRY_JSON.read_text())
+    committed.pop("comment", None)
+    errors = []
+    for kind in ("counters", "gauges"):
+        live_set = set(live[kind])
+        got = set(committed.get(kind, []))
+        for n in sorted(live_set - got):
+            errors.append(f"{kind[:-1]} {n!r} declared in names.py but "
+                          "not committed — run --update-registry")
+        for n in sorted(got - live_set):
+            errors.append(f"{kind[:-1]} {n!r} committed but no longer "
+                          "declared in names.py")
+    live_h = {k: list(v) for k, v in live["histograms"].items()}
+    got_h = committed.get("histograms", {})
+    for n in sorted(set(live_h) ^ set(got_h)):
+        where = "names.py" if n in live_h else "committed mirror"
+        errors.append(f"histogram {n!r} only in {where}")
+    for n in sorted(set(live_h) & set(got_h)):
+        if list(live_h[n]) != list(got_h[n]):
+            errors.append(f"histogram {n!r} edges drifted: names.py "
+                          f"{live_h[n]} vs committed {got_h[n]}")
+    n_metrics = (len(live["counters"]) + len(live["gauges"])
+                 + len(live["histograms"]))
+    return checklib.CheckResult(name, errors=errors,
+                                detail=f"{n_metrics} metric(s) in sync"
+                                if not errors else "")
+
+
+def _known_names(registry: dict) -> dict[str, set[str]]:
+    return {"counters": set(registry["counters"]),
+            "gauges": set(registry["gauges"]),
+            "histograms": set(registry["histograms"])}
+
+
+def _validate_snapshot(snap: dict, known: dict[str, set[str]],
+                       label: str) -> list[str]:
+    errors = []
+    for kind in ("counters", "gauges", "histograms"):
+        if kind not in snap or not isinstance(snap[kind], dict):
+            errors.append(f"{label}: missing/non-dict section {kind!r}")
+            continue
+        for mname, value in snap[kind].items():
+            if mname not in known[kind]:
+                errors.append(f"{label}: unknown {kind[:-1]} {mname!r} "
+                              "— declare it in repro.obs.names and "
+                              "regenerate the registry")
+            if kind == "histograms":
+                if (not isinstance(value, dict)
+                        or not isinstance(value.get("edges"), list)
+                        or not isinstance(value.get("counts"), list)):
+                    errors.append(f"{label}: histogram {mname!r} must "
+                                  "carry edges/counts lists")
+                elif len(value["counts"]) != len(value["edges"]) + 1:
+                    errors.append(
+                        f"{label}: histogram {mname!r} has "
+                        f"{len(value['counts'])} counts for "
+                        f"{len(value['edges'])} edges (want edges+1)")
+            elif not isinstance(value, (int, float)):
+                errors.append(f"{label}: {kind[:-1]} {mname!r} value "
+                              f"{value!r} is not a number")
+    return errors
+
+
+def check_snapshots() -> checklib.CheckResult:
+    name = "metrics-snapshots"
+    files = sorted(RESULTS.glob("metrics-*.json"))
+    if not files:
+        return checklib.CheckResult(name, skipped=True,
+                                    detail="no results/metrics-*.json")
+    known = _known_names(_load_registry())
+    errors = []
+    for path in files:
+        try:
+            snap = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"{path.name}: unreadable ({e!r})")
+            continue
+        errors.extend(_validate_snapshot(snap, known, path.name))
+    return checklib.CheckResult(
+        name, errors=errors,
+        detail=f"{len(files)} snapshot(s) valid" if not errors else "")
+
+
+def _validate_trace(payload, label: str) -> list[str]:
+    if not isinstance(payload, dict) or "traceEvents" not in payload:
+        return [f"{label}: not chrome-trace JSON (no traceEvents)"]
+    events = payload["traceEvents"]
+    if not isinstance(events, list) or not events:
+        return [f"{label}: traceEvents must be a non-empty list"]
+    errors = []
+    for i, ev in enumerate(events):
+        missing = _EVENT_KEYS - set(ev)
+        if not missing and ev.get("ph") != "M":
+            missing = _TIMED_KEYS - set(ev)
+        if missing:
+            errors.append(f"{label}: event {i} missing keys "
+                          f"{sorted(missing)}")
+            continue
+        if ev["ph"] not in _PHASES:
+            errors.append(f"{label}: event {i} unknown phase "
+                          f"{ev['ph']!r}")
+        if ev["ph"] == "X" and ev.get("dur", -1) < 0:
+            errors.append(f"{label}: complete event {i} "
+                          f"({ev['name']!r}) lacks non-negative dur")
+        if len(errors) >= 5:
+            errors.append(f"{label}: ... further errors elided")
+            break
+    return errors
+
+
+def check_traces() -> checklib.CheckResult:
+    name = "traces"
+    files = sorted(RESULTS.glob("trace-*.json"))
+    if not files:
+        return checklib.CheckResult(name, skipped=True,
+                                    detail="no results/trace-*.json")
+    errors = []
+    n_spans = 0
+    for path in files:
+        try:
+            payload = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"{path.name}: unreadable ({e!r})")
+            continue
+        errors.extend(_validate_trace(payload, path.name))
+        if isinstance(payload, dict):
+            n_spans += sum(1 for ev in payload.get("traceEvents", [])
+                           if isinstance(ev, dict) and ev.get("ph") == "X")
+    return checklib.CheckResult(
+        name, errors=errors,
+        detail=f"{len(files)} trace(s), {n_spans} span(s)"
+        if not errors else "")
+
+
+def update_registry() -> int:
+    payload = {"comment": "committed mirror of "
+                          "repro.obs.names.registry_dict() — regenerate "
+                          "with tools/check_obs.py --update-registry",
+               **_load_registry()}
+    REGISTRY_JSON.write_text(
+        json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {REGISTRY_JSON}")
+    return checklib.EXIT_OK
+
+
+def main(argv=None) -> int:
+    parser = checklib.make_parser(
+        "check_obs.py", "observability contracts: metric-name registry, "
+                        "metrics snapshots, trace schemas")
+    parser.add_argument("--update-registry", action="store_true",
+                        help="regenerate tools/obs_metric_names.json "
+                             "from repro.obs.names and exit")
+    args = parser.parse_args(argv)
+    if args.update_registry:
+        return update_registry()
+    return checklib.run_checks(
+        "obs", [check_registry_sync, check_snapshots, check_traces])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,7 +5,7 @@ Two zero-FLOP passes (:mod:`repro.analysis`), run before anything
 compiles:
 
 1. **reprolint** — the JAX-aware AST rules (RETRACE / COLLECTIVE /
-   DTYPE / PRNG / PURITY) over ``src/`` at gating severity and over
+   DTYPE / PRNG / PURITY / BENCH) over ``src/`` at gating severity and over
    ``benchmarks/ tests/ tools/ examples/`` at report-only severity
    (intentional host-side numpy in bench/test scripts prints but never
    fails).  Pre-existing findings live in the committed baseline
